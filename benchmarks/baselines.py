@@ -1,0 +1,91 @@
+"""Index baselines for the paper's comparisons (Sec. 7.1).
+
+Array-packed analogues of the paper's STX-tree baselines (DESIGN.md Sec. 8):
+  * FullIndex      -- one (key, pointer) entry per key ("dense"): best-case
+                      lookup reference, 16B/key storage.
+  * FixedPagedIndex-- fixed-size pages, first key per page indexed ("sparse");
+                      per-page insert buffers, split-on-full (Sec. 7.1.3).
+  * BinarySearch   -- zero-storage baseline over the raw array.
+"""
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+
+class FullIndex:
+    def __init__(self, keys: np.ndarray):
+        self.keys = np.asarray(keys, np.float64)
+
+    def size_bytes(self) -> int:
+        return self.keys.shape[0] * 16
+
+    def lookup_batch(self, q: np.ndarray) -> np.ndarray:
+        r = np.searchsorted(self.keys, q, side="left")
+        ok = (r < self.keys.shape[0]) & (self.keys[np.minimum(r, len(self.keys) - 1)] == q)
+        return np.where(ok, r, -1)
+
+
+class BinarySearch(FullIndex):
+    def size_bytes(self) -> int:
+        return 0
+
+
+class FixedPagedIndex:
+    """Sparse index: first key of each fixed-size page + per-page buffers."""
+
+    def __init__(self, keys: np.ndarray, page_size: int, buffer_size: int = 0):
+        keys = np.asarray(keys, np.float64)
+        self.page_size = int(page_size)
+        self.buffer_size = int(buffer_size)
+        self.pages = [keys[i: i + page_size]
+                      for i in range(0, keys.shape[0], page_size)]
+        self.page_keys = np.asarray([p[0] for p in self.pages])
+        self.buffers: list[list[float]] = [[] for _ in self.pages]
+
+    def size_bytes(self) -> int:
+        # 16B per page entry + tree overhead factor like Sec. 6.2's accounting
+        return len(self.pages) * 24
+
+    def lookup_batch(self, q: np.ndarray) -> np.ndarray:
+        """Vectorized: page via searchsorted over page keys, then local search
+        in a fixed-width window (the page)."""
+        q = np.asarray(q, np.float64)
+        pid = np.clip(np.searchsorted(self.page_keys, q, side="right") - 1,
+                      0, len(self.pages) - 1)
+        out = np.full(q.shape[0], -1, np.int64)
+        base = np.cumsum([0] + [p.shape[0] for p in self.pages])
+        for i, (qq, pp) in enumerate(zip(q, pid)):
+            page = self.pages[pp]
+            j = np.searchsorted(page, qq, side="left")
+            if j < page.shape[0] and page[j] == qq:
+                out[i] = base[pp] + j
+        return out
+
+    def lookup_one(self, qq: float):
+        pid = min(max(int(np.searchsorted(self.page_keys, qq, "right")) - 1, 0),
+                  len(self.pages) - 1)
+        page = self.pages[pid]
+        j = int(np.searchsorted(page, qq, "left"))
+        if j < page.shape[0] and page[j] == qq:
+            return pid, j
+        buf = self.buffers[pid]
+        k = bisect.bisect_left(buf, qq)
+        if k < len(buf) and buf[k] == qq:
+            return pid, -(k + 1)
+        return None
+
+    def insert(self, key: float):
+        pid = min(max(int(np.searchsorted(self.page_keys, key, "right")) - 1, 0),
+                  len(self.pages) - 1)
+        buf = self.buffers[pid]
+        bisect.insort(buf, key)
+        if len(buf) >= self.buffer_size:
+            merged = np.sort(np.concatenate([self.pages[pid],
+                                             np.asarray(buf, np.float64)]))
+            halves = [merged[: merged.shape[0] // 2],
+                      merged[merged.shape[0] // 2:]]
+            self.pages[pid: pid + 1] = halves
+            self.buffers[pid: pid + 1] = [[], []]
+            self.page_keys = np.asarray([p[0] for p in self.pages])

@@ -1,0 +1,40 @@
+"""Fig. 13: lookup time split -- segment location (tree) vs in-segment search."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FITingTree
+from repro.core.datasets import weblogs_like
+
+from .common import emit, timeit, write_csv
+
+N = 500_000
+NQ = 20_000
+ERRORS = [16, 256, 4096]
+
+
+def run():
+    keys = weblogs_like(N)
+    rng = np.random.default_rng(5)
+    q = keys[rng.integers(0, N, size=NQ)]
+    rows = []
+    for e in ERRORS:
+        tree = FITingTree(keys, error=e, assume_sorted=True)
+
+        def tree_search_only(qq):
+            sid = np.clip(np.searchsorted(tree.start_keys, qq, "right") - 1,
+                          0, tree.n_segments - 1)
+            return sid
+
+        t_tree = timeit(tree_search_only, q) / NQ * 1e9
+        t_total = timeit(tree.lookup_batch, q) / NQ * 1e9
+        rows.append((e, t_tree, max(t_total - t_tree, 0.0), t_total))
+    write_csv("fig13_breakdown", ["error", "tree_ns", "segment_ns",
+                                  "total_ns"], rows)
+    emit("fig13", "tree_fraction_small_error", rows[0][1] / rows[0][3])
+    emit("fig13", "tree_fraction_large_error", rows[-1][1] / rows[-1][3])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

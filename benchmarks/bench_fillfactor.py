@@ -1,0 +1,37 @@
+"""Fig. 12: insert throughput vs per-segment buffer size (error fixed)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FITingTree
+from repro.core.datasets import weblogs_like
+
+from .common import emit, write_csv
+
+N = 200_000
+N_INS = 20_000
+ERROR = 2000
+BUFFERS = [16, 64, 256, 1024]
+
+
+def run():
+    keys = weblogs_like(N)
+    rng = np.random.default_rng(4)
+    new = rng.uniform(keys[0], keys[-1], size=N_INS)
+    rows = []
+    for b in BUFFERS:
+        tree = FITingTree(keys, error=ERROR, buffer_size=b, assume_sorted=True)
+        t0 = time.perf_counter()
+        for k in new:
+            tree.insert(k)
+        dt = time.perf_counter() - t0
+        rows.append((b, N_INS / dt))
+    write_csv("fig12_fillfactor", ["buffer_size", "inserts_per_s"], rows)
+    emit("fig12", "throughput_gain_16_to_1024", rows[-1][1] / rows[0][1])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

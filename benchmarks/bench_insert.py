@@ -1,0 +1,49 @@
+"""Fig. 7: insert throughput vs error threshold (buffer = error/2, Sec. 7.1.3)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FITingTree
+from repro.core.datasets import iot_like, weblogs_like
+
+from .baselines import FixedPagedIndex
+from .common import emit, write_csv
+
+N = 200_000
+N_INS = 20_000
+ERRORS = [64, 256, 1024, 4096]
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(1)
+    for name, make in [("weblogs", weblogs_like), ("iot", iot_like)]:
+        keys = make(N)
+        lo, hi = keys[0], keys[-1]
+        new = rng.uniform(lo, hi, size=N_INS)
+        for e in ERRORS:
+            tree = FITingTree(keys, error=e, buffer_size=e // 2,
+                              assume_sorted=True)
+            t0 = time.perf_counter()
+            for k in new:
+                tree.insert(k)
+            dt = time.perf_counter() - t0
+            rows.append((name, "fiting", e, N_INS / dt))
+            fx = FixedPagedIndex(keys, page_size=e, buffer_size=e // 2)
+            t0 = time.perf_counter()
+            for k in new:
+                fx.insert(k)
+            dt = time.perf_counter() - t0
+            rows.append((name, "fixed", e, N_INS / dt))
+        emit("fig7", f"{name}_inserts_per_s_e1024",
+             next(r[3] for r in rows if r[0] == name and r[1] == "fiting"
+                  and r[2] == 1024))
+    write_csv("fig7_insert", ["dataset", "method", "error", "inserts_per_s"],
+              rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

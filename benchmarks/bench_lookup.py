@@ -1,0 +1,59 @@
+"""Fig. 6: lookup latency vs index size -- A-tree / fixed paging / full /
+binary search, on the three paper-shaped datasets."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FITingTree
+from repro.core.datasets import iot_like, maps_like, weblogs_like
+
+from .baselines import BinarySearch, FixedPagedIndex, FullIndex
+from .common import emit, timeit, write_csv
+
+N = 500_000
+NQ = 20_000
+ERRORS = [16, 64, 256, 1024, 4096, 16384]
+PAGES = [16, 64, 256, 1024, 4096, 16384]
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for name, make in [("weblogs", weblogs_like), ("iot", iot_like),
+                       ("maps", maps_like)]:
+        keys = make(N)
+        q = keys[rng.integers(0, N, size=NQ)]
+
+        full = FullIndex(keys)
+        t = timeit(full.lookup_batch, q)
+        rows.append((name, "full", 0, full.size_bytes(), t / NQ * 1e9))
+        bs = BinarySearch(keys)
+        t = timeit(bs.lookup_batch, q)
+        rows.append((name, "binary", 0, 0, t / NQ * 1e9))
+
+        for e in ERRORS:
+            tree = FITingTree(keys, error=e, assume_sorted=True)
+            t = timeit(tree.lookup_batch, q)
+            rows.append((name, "fiting", e, tree.index_size_bytes(),
+                         t / NQ * 1e9))
+        for p in PAGES:
+            fx = FixedPagedIndex(keys, page_size=p)
+            t = timeit(fx.lookup_batch, q) if p >= 256 else \
+                timeit(fx.lookup_batch, q[:2000]) * (NQ / 2000)
+            rows.append((name, "fixed", p, fx.size_bytes(), t / NQ * 1e9))
+    write_csv("fig6_lookup", ["dataset", "method", "param", "size_bytes",
+                              "ns_per_lookup"], rows)
+    # headline: space ratio at comparable latency (error=256 vs full)
+    for name in ("weblogs", "iot", "maps"):
+        f_lat = next(r[4] for r in rows if r[0] == name and r[1] == "full")
+        f_sz = next(r[3] for r in rows if r[0] == name and r[1] == "full")
+        a = [r for r in rows if r[0] == name and r[1] == "fiting"]
+        ok = [r for r in a if r[4] <= 2.0 * f_lat] or a[:1]
+        best = min(ok, key=lambda r: r[3])
+        emit("fig6", f"{name}_space_ratio", f_sz / max(best[3], 1),
+             f"atree={best[3]}B@{best[4]:.0f}ns;full={f_sz}B@{f_lat:.0f}ns")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

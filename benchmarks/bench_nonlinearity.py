@@ -1,0 +1,28 @@
+"""Fig. 8: non-linearity ratio of each dataset across error scales."""
+from __future__ import annotations
+
+from repro.core.datasets import (iot_like, maps_like, non_linearity_ratio,
+                                 weblogs_like)
+
+from .common import emit, write_csv
+
+N = 500_000
+ERRORS = [10, 100, 1000, 10_000, 100_000]
+
+
+def run():
+    rows = []
+    for name, make in [("iot", iot_like), ("weblogs", weblogs_like),
+                       ("maps", maps_like)]:
+        keys = make(N)
+        for e in ERRORS:
+            r = non_linearity_ratio(keys, e)
+            rows.append((name, e, r))
+        peak = max(r for (n, _, r) in rows if n == name)
+        emit("fig8", f"{name}_peak_nonlinearity", peak)
+    write_csv("fig8_nonlinearity", ["dataset", "error", "ratio"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 11: lookup latency vs dataset scale (error = page = 100, like paper)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import FITingTree
+from repro.core.datasets import weblogs_like
+
+from .baselines import BinarySearch, FixedPagedIndex, FullIndex
+from .common import emit, timeit, write_csv
+
+NQ = 10_000
+SCALES = [1, 2, 4, 8]
+BASE = 125_000
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(3)
+    for s in SCALES:
+        n = BASE * s
+        keys = weblogs_like(n, days=365 * s)
+        q = keys[rng.integers(0, n, size=NQ)]
+        tree = FITingTree(keys, error=100, assume_sorted=True)
+        fx = FixedPagedIndex(keys, page_size=100)
+        rows.append((s, "fiting", timeit(tree.lookup_batch, q) / NQ * 1e9,
+                     tree.index_size_bytes()))
+        rows.append((s, "full", timeit(FullIndex(keys).lookup_batch, q)
+                     / NQ * 1e9, n * 16))
+        rows.append((s, "binary", timeit(BinarySearch(keys).lookup_batch, q)
+                     / NQ * 1e9, 0))
+        t = timeit(fx.lookup_batch, q[:2000]) * (NQ / 2000)
+        rows.append((s, "fixed", t / NQ * 1e9, fx.size_bytes()))
+    write_csv("fig11_scalability", ["scale", "method", "ns_per_lookup",
+                                    "size_bytes"], rows)
+    small = next(r[2] for r in rows if r[0] == 1 and r[1] == "fiting")
+    big = next(r[2] for r in rows if r[0] == 8 and r[1] == "fiting")
+    emit("fig11", "latency_growth_1_to_8x", big / small)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Table 1: ShrinkingCone vs optimal DP segment counts across datasets/errors,
+plus the beyond-paper clamped-cone mode (EXPERIMENTS.md SPerf).
+
+Paper ran n=1e6 on 768GB RAM; we run n=20k on this container (DESIGN.md Sec. 8)
+-- the ratio is the reproduction target (paper: 1.05-1.6)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import optimal_segmentation, shrinking_cone
+from repro.core.datasets import (iot_like, lognormal_keys, maps_like,
+                                 weblogs_like)
+
+from .common import emit, write_csv
+
+N = 20_000
+DATASETS = [("iot", iot_like), ("weblogs", weblogs_like), ("maps", maps_like),
+            ("lognormal", lognormal_keys)]
+ERRORS = [10, 100]
+
+
+def run():
+    rows = []
+    for name, make in DATASETS:
+        keys = make(N)
+        for err in ERRORS:
+            t0 = time.perf_counter()
+            greedy = shrinking_cone(keys, err).n_segments
+            t_greedy = time.perf_counter() - t0
+            clamped = shrinking_cone(keys, err, mode="clamped").n_segments
+            t0 = time.perf_counter()
+            opt = optimal_segmentation(keys, err)
+            t_opt = time.perf_counter() - t0
+            ratio = greedy / max(opt, 1)
+            rows.append((name, err, greedy, clamped, opt, round(ratio, 3),
+                         round(clamped / max(opt, 1), 3),
+                         round(t_greedy * 1e3, 1), round(t_opt * 1e3, 1)))
+            emit("table1", f"{name}_e{err}_ratio", ratio,
+                 f"greedy={greedy};clamped={clamped};opt={opt}")
+    write_csv("table1_segmentation", ["dataset", "error", "shrinking_cone",
+                                      "clamped", "optimal", "ratio",
+                                      "clamped_ratio", "greedy_ms",
+                                      "optimal_ms"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Fig. 9: adversarial step data -- index size cliff at error == step size."""
+from __future__ import annotations
+
+from repro.core import FITingTree
+from repro.core.datasets import step_data
+
+from .baselines import FixedPagedIndex, FullIndex
+from .common import emit, write_csv
+
+N = 200_000
+STEP = 100
+ERRORS = [10, 25, 50, 75, 99, 101, 150, 200, 400]
+
+
+def run():
+    keys = step_data(n=N, step=STEP)
+    rows = []
+    full = FullIndex(keys)
+    rows.append(("full", 0, full.size_bytes()))
+    for e in ERRORS:
+        tree = FITingTree(keys, error=e, assume_sorted=True)
+        fx = FixedPagedIndex(keys, page_size=max(e, 2))
+        rows.append(("fiting", e, tree.index_size_bytes()))
+        rows.append(("fixed", e, fx.size_bytes()))
+    write_csv("fig9_worstcase", ["method", "error", "size_bytes"], rows)
+    # cliff at error ~= step (paper Fig. 9b): segments anchor at their first
+    # point, so spanning a step's 100-position jump needs error >= step-1
+    below = next(r[2] for r in rows if r[0] == "fiting" and r[1] == 75)
+    above = next(r[2] for r in rows if r[0] == "fiting" and r[1] == 101)
+    emit("fig9", "size_cliff_ratio", below / max(above, 1),
+         f"e75={below}B;e101={above}B")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark plumbing: timing + CSV rows."""
+from __future__ import annotations
+
+import csv
+import pathlib
+import time
+from typing import Iterable
+
+OUT_DIR = pathlib.Path(__file__).parent / "out"
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def write_csv(name: str, header: list[str], rows: Iterable[tuple]):
+    OUT_DIR.mkdir(exist_ok=True)
+    path = OUT_DIR / f"{name}.csv"
+    with path.open("w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+def emit(bench: str, metric: str, value: float, derived: str = ""):
+    """The run.py contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{bench}.{metric},{value:.4g},{derived}")

@@ -1,0 +1,186 @@
+"""SRoofline: three roofline terms per (arch x shape) from the dry-run cells.
+
+    compute term    = jaxpr_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HBM_traffic / (chips x 819 GB/s)
+    collective term = collective_bytes / (chips x 50 GB/s ICI)
+
+Sources & caveats (documented per EXPERIMENTS.md):
+  * FLOPs: jaxpr-level count (launch/flops_count.py), NOT XLA cost_analysis --
+    XLA counts while bodies once (verified); the jaxpr count multiplies scan
+    bodies by length and includes remat recompute, so
+    MODEL_FLOPS/jaxpr_FLOPs is exactly the useful-compute fraction.
+  * collective bytes: post-SPMD HLO parse with while-trip multiplication
+    (launch/hlo_analysis.py); already per-device.
+  * HBM traffic: analytic (params/optimizer/caches/residuals reads+writes --
+    formulas below); XLA's 'bytes accessed' has the same while-body
+    undercount so it is recorded but not used.
+
+MODEL_FLOPS = 6*N_active*D(tokens) for train, 2*N_active*D for inference,
+plus the attention term (4*B*T*S_eff*H*hd per layer, x3 for train).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16]
+Writes experiments/roofline.csv + experiments/roofline.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+DRYRUN = pathlib.Path("experiments/dryrun")
+
+
+def _model_flops_and_traffic(arch: str, shape: str, chips: int,
+                             temp_dev: float, arg_dev: float):
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.models.model import active_param_count, param_count
+
+    cfg = get_config(arch)
+    s = SHAPES[shape]
+    n_act = active_param_count(cfg)
+    n_tot = param_count(cfg)
+    b, t = s.global_batch, s.seq_len
+    hd, h = cfg.hd, cfg.n_heads
+
+    # attention effective context per block type
+    def s_eff(bt, q_len, ctx_len):
+        if bt in ("attn", "enc", "moe", "self+cross"):
+            return (ctx_len + 1) / 2 if s.kind == "train" else ctx_len
+        if bt == "local":
+            return min(cfg.window, ctx_len)
+        if bt == "cross":
+            return cfg.memory_len
+        return 0  # recurrent blocks counted via 6ND already
+
+    attn_layers = [(bt, r) for unit, r in
+                   (tuple(cfg.stacks) + tuple(cfg.encoder_stacks))
+                   for bt in unit]
+    if s.kind == "train":
+        tokens = b * t
+        mf = 6.0 * n_act * tokens
+        for bt, r in attn_layers:
+            mf += 12.0 * b * t * s_eff(bt, t, t) * h * hd * r
+            if bt == "self+cross":
+                mf += 12.0 * b * t * cfg.memory_len * h * hd * r
+        # traffic: params fwd+remat+bwd reads (3x2B) + grads f32 rw (8B) +
+        # adam m,v rw (16B) + param write (2B) = 32 B/param, plus layer
+        # residuals (write+read, bf16)
+        traffic = 32.0 * n_tot / chips
+        traffic += 4.0 * tokens * cfg.d_model * cfg.n_layers * 2 / chips
+    elif s.kind == "prefill":
+        tokens = b * t
+        mf = 2.0 * n_act * tokens
+        for bt, r in attn_layers:
+            mf += 4.0 * b * t * ((t + 1) / 2 if bt not in ("local", "cross")
+                                 else s_eff(bt, t, t)) * h * hd * r
+            if bt == "self+cross":
+                mf += 4.0 * b * t * cfg.memory_len * h * hd * r
+        traffic = 2.0 * n_tot / chips            # params bf16 read
+        traffic += arg_dev                        # cache write ~ cache size
+        traffic += 4.0 * tokens * cfg.d_model * cfg.n_layers * 2 / chips
+    else:  # decode: one token against a cache of t
+        tokens = b * 1
+        mf = 2.0 * n_act * tokens
+        for bt, r in attn_layers:
+            mf += 4.0 * b * 1 * s_eff(bt, 1, t) * h * hd * r
+            if bt == "self+cross":
+                mf += 4.0 * b * cfg.memory_len * h * hd * r
+        # params read once + full cache read (+epsilon write)
+        traffic = 2.0 * n_tot / chips + arg_dev
+    return mf, traffic
+
+
+def analyze(mesh_name: str = "pod16x16") -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh_name}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "status": "skipped", "reason": rec["reason"]})
+            continue
+        chips = rec["n_devices"]
+        temp = rec["memory"].get("temp_size_in_bytes", 0)
+        arg = rec["memory"].get("argument_size_in_bytes", 0)
+        jaxpr_flops = rec.get("jaxpr_flops_global", 0.0)
+        coll = rec["collectives"].get(
+            "wire_bytes", rec["collectives"]["total_collective_bytes"])
+        mf, traffic = _model_flops_and_traffic(
+            rec["arch"], rec["shape"], chips, temp, arg)
+        t_c = jaxpr_flops / chips / PEAK_FLOPS
+        t_m = traffic / HBM_BW
+        t_x = coll / ICI_BW
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "chips": chips,
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "dominant": dom,
+            "model_flops": mf, "jaxpr_flops": jaxpr_flops,
+            "useful_frac": mf / jaxpr_flops if jaxpr_flops else 0.0,
+            "roofline_frac": max(t_c, t_m, t_x) and
+            (mf / chips / PEAK_FLOPS) / max(t_c, t_m, t_x),
+            "temp_gb_dev": temp / 1e9, "arg_gb_dev": arg / 1e9,
+            "hlo_flops_raw": rec["cost"].get("flops", 0.0),
+            "coll_bytes_dev": coll,
+        })
+    return rows
+
+
+def _advice(r: dict) -> str:
+    if r["dominant"] == "collective":
+        return ("shrink FSDP all-gathers: larger per-step microbatch or "
+                "2D-shard fewer tensors over `data`")
+    if r["dominant"] == "memory":
+        if "decode" in r["shape"] or "500k" in r["shape"]:
+            return ("decode is weight/KV-bandwidth bound: quantize KV or "
+                    "raise batch to amortize weight reads")
+        return "fuse residual writes / relax remat policy to cut HBM traffic"
+    if r["useful_frac"] < 0.5:
+        return "compute-bound but <50% useful: relax remat (save mlp acts)"
+    return "compute-bound near roofline: kernel-level tiling is the next lever"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    rows = analyze(args.mesh)
+    suffix = "" if args.mesh == "pod16x16" else f"_{args.mesh}"
+    out_csv = pathlib.Path(f"experiments/roofline{suffix}.csv")
+    out_md = pathlib.Path(f"experiments/roofline{suffix}.md")
+    hdr = ["arch", "shape", "dominant", "compute_s", "memory_s",
+           "collective_s", "useful_frac", "roofline_frac", "temp_gb_dev"]
+    with out_csv.open("w") as f:
+        f.write(",".join(hdr) + "\n")
+        for r in rows:
+            if r["status"] != "ok":
+                continue
+            f.write(",".join(str(round(r[k], 6)) if isinstance(r[k], float)
+                             else str(r[k]) for k in hdr) + "\n")
+    lines = [f"# Roofline ({args.mesh}, v5e constants: 197TF bf16 / "
+             f"819GB/s HBM / 50GB/s ICI)\n",
+             "| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | useful frac | roofline frac | what would move it |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"skipped | - | - | {r['reason'][:60]}... |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"**{r['dominant']}** | {r['useful_frac']:.2f} | "
+                f"{r['roofline_frac']:.2f} | {_advice(r)} |")
+    out_md.write_text("\n".join(lines) + "\n")
+    print(out_md.read_text())
+
+
+if __name__ == "__main__":
+    main()

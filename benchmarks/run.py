@@ -1,0 +1,46 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (the emit() contract) and writes
+full result tables to benchmarks/out/*.csv.  Roofline analysis over the
+dry-run artifacts lives in benchmarks/roofline.py (needs experiments/dryrun).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_segmentation",   # Table 1
+    "bench_lookup",         # Fig 6
+    "bench_insert",         # Fig 7
+    "bench_nonlinearity",   # Fig 8
+    "bench_worstcase",      # Fig 9
+    "bench_costmodel",      # Fig 10
+    "bench_scalability",    # Fig 11
+    "bench_fillfactor",     # Fig 12
+    "bench_breakdown",      # Fig 13
+    "bench_kernel",         # Pallas lookup kernel
+]
+
+
+def main() -> None:
+    print("name,value,derived")
+    failures = []
+    for mod_name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run()
+            print(f"# {mod_name} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"failed benches: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: build a FITing-Tree, look up keys, insert, pick error via the
+cost model -- the paper's full lifecycle in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (CostParams, FITingTree, choose_error_for_latency,
+                        choose_error_for_space, latency_ns, learn_segments_fn,
+                        shrinking_cone, size_bytes)
+from repro.core.datasets import iot_like
+
+
+def main():
+    print("=== FITing-Tree quickstart (IoT-shaped timestamps) ===")
+    keys = iot_like(500_000)
+    print(f"dataset: {keys.shape[0]} sorted keys "
+          f"[{keys[0]:.0f} .. {keys[-1]:.0f}]")
+
+    # 1. segmentation at a few error thresholds (Sec. 3)
+    for e in (10, 100, 1000):
+        segs = shrinking_cone(keys, e)
+        print(f"  error={e:5d}: {segs.n_segments:6d} segments "
+              f"({segs.size_bytes()} B vs dense {keys.shape[0]*16} B)")
+
+    # 2. the index (Sec. 4): lookups hit a +-error window, never a full scan
+    tree = FITingTree(keys, error=100, buffer_size=32)
+    rng = np.random.default_rng(0)
+    probe = keys[rng.integers(0, keys.shape[0], size=8)]
+    for k in probe[:3]:
+        sid, off, _ = tree.lookup(k)
+        print(f"  lookup({k:.3f}) -> segment {sid}, offset {off}")
+    ranks = tree.lookup_batch(probe)
+    assert np.all(keys[ranks] == probe)
+    print(f"  batched lookup of {probe.shape[0]} keys OK; "
+          f"index={tree.index_size_bytes()} B, {tree.n_segments} segments")
+
+    # 3. inserts (Sec. 5): buffered, bound maintained across merges
+    for k in rng.uniform(keys[0], keys[-1], size=1000):
+        tree.insert(k)
+    assert tree.max_abs_error() <= tree.err_seg + 1e-6
+    print(f"  1000 inserts; max abs error {tree.max_abs_error():.1f} "
+          f"<= err_seg {tree.err_seg}; segments now {tree.n_segments}")
+
+    # 4. cost model (Sec. 6): pick error from an SLA
+    cands = [16, 64, 256, 1024, 4096]
+    fn = learn_segments_fn(keys, cands)
+    p = CostParams(c_ns=100.0)
+    e_lat = choose_error_for_latency(2000.0, fn, cands, p)
+    e_sz = choose_error_for_space(64 * 1024, fn, cands, p)
+    print(f"  2000ns SLA -> error={e_lat} "
+          f"(predicted {latency_ns(e_lat, fn(e_lat), p):.0f} ns)")
+    print(f"  64KB budget -> error={e_sz} "
+          f"(predicted {size_bytes(e_sz, fn(e_sz), p)/1024:.1f} KB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Sharded checkpoint save/restore."""

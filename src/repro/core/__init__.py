@@ -1,0 +1,19 @@
+"""FITing-Tree core: the paper's contribution (segmentation, index, cost model)."""
+from .segmentation import (Segments, max_segments_bound, optimal_segmentation,
+                           shrinking_cone, shrinking_cone_py, verify_segments)
+from .tree import FITingTree, PackedRouter
+from .cost_model import (CostParams, TPUCostParams, choose_error_for_latency,
+                         choose_error_for_space, latency_ns, latency_ns_tpu,
+                         learn_segments_fn, size_bytes)
+from .jax_index import (DeviceIndex, build_device_index, lookup,
+                        predict_positions, range_count, rescale_keys)
+from . import datasets
+
+__all__ = [
+    "Segments", "shrinking_cone", "shrinking_cone_py", "optimal_segmentation",
+    "verify_segments", "max_segments_bound", "FITingTree", "PackedRouter",
+    "CostParams", "TPUCostParams", "latency_ns", "latency_ns_tpu", "size_bytes",
+    "learn_segments_fn", "choose_error_for_latency", "choose_error_for_space",
+    "DeviceIndex", "build_device_index", "lookup", "predict_positions",
+    "range_count", "rescale_keys", "datasets",
+]

@@ -1,0 +1,106 @@
+"""Sec. 6 cost model: pick the error threshold from a latency SLA or space budget.
+
+Implements the paper's two models verbatim plus a TPU-roofline variant
+(DESIGN.md Sec. 2): on TPU the router lives in VMEM (free of HBM traffic) and a
+lookup pays one HBM->VMEM DMA of the +-error window, so the latency model is a
+bandwidth term instead of a cache-miss count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from .segmentation import shrinking_cone
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    c_ns: float = 50.0        # random-access / cache-miss penalty (paper Sec. 7.4: 50ns)
+    fanout: int = 16          # b, router fanout
+    fill: float = 0.5         # f, tree fill ratio (Sec. 6.2)
+    buffer_size: int = 16     # buff
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUCostParams:
+    hbm_gbps: float = 819.0   # v5e HBM bandwidth
+    dma_setup_ns: float = 600.0   # fixed DMA issue latency
+    vmem_step_ns: float = 3.0     # per router level probe in VMEM
+    bytes_per_key: int = 8
+
+
+def latency_ns(error: int, n_segments: int, p: CostParams) -> float:
+    """Paper Eq. (1), Sec. 6.1: c * [log_b(S_e) + log2(e) + log2(buff)]."""
+    tree = math.log(max(n_segments, 2), p.fanout)
+    seg = math.log2(max(error, 2))
+    buf = math.log2(max(p.buffer_size, 2))
+    return p.c_ns * (tree + seg + buf)
+
+
+def size_bytes(error: int, n_segments: int, p: CostParams) -> float:
+    """Paper Eq. (1), Sec. 6.2: f*S_e*log_b(S_e)*16B + S_e*24B (pessimistic).
+
+    The tree height term is clamped to >= 1 (a one-node tree still stores its
+    S_e entries), keeping the bound pessimistic for tiny segment counts."""
+    s = max(n_segments, 2)
+    return p.fill * s * max(1.0, math.log(s, p.fanout)) * 16.0 + s * 24.0
+
+
+def latency_ns_tpu(error: int, n_segments: int, p: TPUCostParams,
+                   router_levels: int | None = None) -> float:
+    """TPU adaptation: router probes in VMEM + one window DMA from HBM."""
+    levels = router_levels or max(1, math.ceil(math.log(max(n_segments, 2), 16)))
+    window_bytes = (2 * error + 2) * p.bytes_per_key
+    return p.dma_setup_ns + levels * p.vmem_step_ns + window_bytes / p.hbm_gbps
+
+
+def learn_segments_fn(keys: np.ndarray, errors: Sequence[int],
+                      sample: int | None = 200_000) -> Callable[[int], int]:
+    """Sec. 6: 'learned for a specific dataset' -- segment at each candidate error
+    (optionally on a contiguous sample, scaled back up) and interpolate log-log."""
+    keys = np.asarray(keys, np.float64)
+    scale = 1.0
+    if sample is not None and keys.shape[0] > sample:
+        scale = keys.shape[0] / sample
+        keys = keys[: sample]
+    es, ss = [], []
+    for e in sorted(set(int(e) for e in errors)):
+        segs = shrinking_cone(keys, e)
+        es.append(e)
+        ss.append(max(1, segs.n_segments) * scale)
+    log_e, log_s = np.log(np.array(es, float)), np.log(np.array(ss, float))
+
+    def fn(error: int) -> int:
+        le = math.log(max(1, error))
+        return int(round(math.exp(np.interp(le, log_e, log_s))))
+
+    return fn
+
+
+def choose_error_for_latency(l_req_ns: float, segments_fn: Callable[[int], int],
+                             candidates: Sequence[int], p: CostParams) -> int | None:
+    """Sec. 6.1 Eq. (2): smallest-size index meeting the latency requirement."""
+    best, best_size = None, float("inf")
+    for e in candidates:
+        s = segments_fn(e)
+        if latency_ns(e, s, p) <= l_req_ns:
+            sz = size_bytes(e, s, p)
+            if sz < best_size:
+                best, best_size = e, sz
+    return best
+
+
+def choose_error_for_space(s_req_bytes: float, segments_fn: Callable[[int], int],
+                           candidates: Sequence[int], p: CostParams) -> int | None:
+    """Sec. 6.2 Eq. (2): fastest index within the storage budget."""
+    best, best_lat = None, float("inf")
+    for e in candidates:
+        s = segments_fn(e)
+        if size_bytes(e, s, p) <= s_req_bytes:
+            lat = latency_ns(e, s, p)
+            if lat < best_lat:
+                best, best_lat = e, lat
+    return best

@@ -1,0 +1,185 @@
+"""Range-partitioned FITing-Tree across a device mesh (DESIGN.md Sec. 5).
+
+The key space is split into equal-count contiguous shards; each device owns one
+shard's sorted keys plus its own segment table.  A tiny replicated *router* --
+the first key of every shard -- is itself the top level of the paper's
+structure recursed once.  Batched queries are exchanged with collectives inside
+``shard_map``:
+
+  * ``lookup_allgather`` -- every shard sees every query (robust to any skew;
+    costs D*Q query bytes on the interconnect, fine for small Q);
+  * ``lookup_a2a``       -- queries are bucketed by owner shard and exchanged
+    with all_to_all using a slack factor (the production path; overflow beyond
+    slack is answered by a follow-up allgather pass in the caller if needed --
+    returned mask marks dropped queries).
+
+Both return global ranks (-1 if absent).  Tests run under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 in a subprocess.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .jax_index import DeviceIndex, lookup
+from .segmentation import shrinking_cone
+
+
+class ShardedIndex(NamedTuple):
+    seg_start: jax.Array   # (D, S_max) f32, padded with +inf
+    slope: jax.Array       # (D, S_max) f32
+    base: jax.Array        # (D, S_max) i32
+    seg_end: jax.Array     # (D, S_max) i32
+    keys: jax.Array        # (D, M) f32 -- equal-count shards
+    boundaries: jax.Array  # (D,) f32 replicated router: first key per shard
+    error: int
+
+
+def build_sharded_index(keys: np.ndarray, error: int, n_shards: int,
+                        mesh: Mesh | None = None, axis: str = "data") -> ShardedIndex:
+    keys = np.asarray(keys, np.float64)
+    n = keys.shape[0]
+    m = n // n_shards
+    keys = keys[: m * n_shards]            # equal shards; tail handled by caller
+    shards = keys.reshape(n_shards, m)
+    seg_list = [shrinking_cone(s, error) for s in shards]
+    s_max = max(sg.n_segments for sg in seg_list)
+
+    def pad(a, fill, dtype):
+        out = np.full((n_shards, s_max), fill, dtype)
+        for d, sg in enumerate(seg_list):
+            out[d, : sg.n_segments] = a(sg)
+        return out
+
+    seg_start = pad(lambda s: s.start_key, np.inf, np.float64)
+    slope = pad(lambda s: s.slope, 0.0, np.float64)
+    base = pad(lambda s: s.base, m, np.int64)
+    seg_end = np.full((n_shards, s_max), m, np.int64)
+    for d, sg in enumerate(seg_list):
+        e = np.concatenate([sg.base[1:], [m]])
+        seg_end[d, : sg.n_segments] = e
+
+    arrays = dict(
+        seg_start=jnp.asarray(seg_start, jnp.float32),
+        slope=jnp.asarray(slope, jnp.float32),
+        base=jnp.asarray(base, jnp.int32),
+        seg_end=jnp.asarray(seg_end, jnp.int32),
+        keys=jnp.asarray(shards, jnp.float32),
+        boundaries=jnp.asarray(shards[:, 0], jnp.float32),
+    )
+    if mesh is not None:
+        shard = NamedSharding(mesh, P(axis, None))
+        repl = NamedSharding(mesh, P())
+        arrays = {k: jax.device_put(v, repl if k == "boundaries" else shard)
+                  for k, v in arrays.items()}
+    return ShardedIndex(error=int(error), **arrays)
+
+
+def _local_index(si: ShardedIndex) -> DeviceIndex:
+    """Inside shard_map every (D, ...) block is (1, ...): squeeze to a local index."""
+    return DeviceIndex(
+        seg_start=si.seg_start[0], slope=si.slope[0], base=si.base[0],
+        seg_end=si.seg_end[0], keys=si.keys[0], error=si.error)
+
+
+def lookup_allgather(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
+                     axis: str = "data") -> jax.Array:
+    """Every shard answers the full query set; one psum combines the answers."""
+    d = mesh.shape[axis]
+    m = si.keys.shape[1]
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
+                       P(axis, None), P(), P(axis)),
+             out_specs=P(axis))
+    def impl(seg_start, slope, base, seg_end, keys, boundaries, q_local):
+        me = jax.lax.axis_index(axis)
+        q_all = jax.lax.all_gather(q_local, axis, tiled=True)       # (Q_total,)
+        local = DeviceIndex(seg_start[0], slope[0], base[0], seg_end[0],
+                            keys[0], si.error)
+        lo_b = boundaries[me]
+        hi_b = jnp.where(me == d - 1, jnp.inf, boundaries[jnp.minimum(me + 1, d - 1)])
+        mine = (q_all >= lo_b) & (q_all < hi_b)
+        mine = mine | ((me == 0) & (q_all < boundaries[0]))
+        local_rank = lookup(local, q_all)                           # -1 if absent
+        global_rank = jnp.where(local_rank >= 0, local_rank + me * m, -1)
+        contrib = jnp.where(mine, global_rank, 0)
+        owned = jnp.where(mine, 1, 0)
+        total = jax.lax.psum(contrib, axis)
+        owners = jax.lax.psum(owned, axis)
+        result = jnp.where(owners > 0, total, -1)
+        # slice this device's chunk back out
+        q_per = q_local.shape[0]
+        return jax.lax.dynamic_slice_in_dim(result, me * q_per, q_per)
+
+    return impl(si.seg_start, si.slope, si.base, si.seg_end, si.keys,
+                si.boundaries, queries)
+
+
+def lookup_a2a(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
+               axis: str = "data", slack: float = 2.0
+               ) -> tuple[jax.Array, jax.Array]:
+    """Bucketed all_to_all exchange (production path).
+
+    Each device buckets its local queries by owner shard into D buckets of
+    capacity ceil(Q/D * slack) (padded with +inf sentinels), exchanges buckets
+    with all_to_all, answers the queries it owns, and reverses the exchange.
+    Returns (ranks, ok) where ok=False marks queries dropped by bucket
+    overflow (caller may re-ask via lookup_allgather).
+    """
+    d = mesh.shape[axis]
+    m = si.keys.shape[1]
+    q_per = queries.shape[0] // d
+    cap = int(np.ceil(q_per / d * slack))
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
+                       P(axis, None), P(), P(axis)),
+             out_specs=(P(axis), P(axis)))
+    def impl(seg_start, slope, base, seg_end, keys, boundaries, q_local):
+        me = jax.lax.axis_index(axis)
+        local = DeviceIndex(seg_start[0], slope[0], base[0], seg_end[0],
+                            keys[0], si.error)
+        owner = jnp.clip(jnp.searchsorted(boundaries, q_local, side="right") - 1,
+                         0, d - 1)                                   # (q,)
+        # slot each query into its bucket (capacity cap) via a stable sort
+        order = jnp.argsort(owner, stable=True)
+        sorted_owner = owner[order]
+        rank_in_bkt = jnp.arange(q_local.shape[0]) - jnp.searchsorted(
+            sorted_owner, sorted_owner, side="left")
+        ok_sorted = rank_in_bkt < cap
+        buckets = jnp.full((d, cap), jnp.inf, q_local.dtype)
+        src_pos = jnp.full((d, cap), -1, jnp.int32)
+        slot = jnp.clip(rank_in_bkt, 0, cap - 1)
+        buckets = buckets.at[sorted_owner, slot].set(
+            jnp.where(ok_sorted, q_local[order], jnp.inf))
+        src_pos = src_pos.at[sorted_owner, slot].set(
+            jnp.where(ok_sorted, order.astype(jnp.int32), -1))
+        # exchange: after a2a, row j of `incoming` is what device j sent to me
+        incoming = jax.lax.all_to_all(buckets, axis, split_axis=0,
+                                      concat_axis=0, tiled=True)     # (d, cap)
+        flat = incoming.reshape(-1)
+        ans = lookup(local, flat)
+        ans = jnp.where(jnp.isinf(flat), -1, ans)
+        ans = jnp.where(ans >= 0, ans + me * m, -1).reshape(d, cap)
+        # reverse exchange
+        back = jax.lax.all_to_all(ans, axis, split_axis=0,
+                                  concat_axis=0, tiled=True).reshape(d, cap)
+        result = jnp.full(q_local.shape, -1, jnp.int32)
+        okq = jnp.zeros(q_local.shape, bool)
+        # scatter answers back to original slots
+        flat_src = src_pos.reshape(-1)
+        flat_back = back.reshape(-1)
+        good = flat_src >= 0
+        result = result.at[jnp.clip(flat_src, 0, None)].max(
+            jnp.where(good, flat_back, -1))
+        okq = okq.at[jnp.clip(flat_src, 0, None)].max(good)
+        return result, okq
+
+    return impl(si.seg_start, si.slope, si.base, si.seg_end, si.keys,
+                si.boundaries, queries)

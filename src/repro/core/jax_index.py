@@ -1,0 +1,131 @@
+"""Device-side (JAX) FITing-Tree: immutable arrays + batched lookups.
+
+This is the TPU-native form of the index (DESIGN.md Sec. 2): the segment table
+is a handful of dense arrays small enough for VMEM; the sorted key column stays
+in HBM; a batched lookup is
+
+    sid   = searchsorted(seg_start, q) - 1            # router (VMEM)
+    pred  = base[sid] + (q - seg_start[sid]) * slope  # VPU FMA
+    rank  = bounded search in keys[pred-e : pred+e]   # one HBM window per query
+
+Two bounded-search strategies are provided (both O(error) bounded):
+  * ``window``  -- gather the 2e+2 window and compare-reduce (vector friendly;
+                   what the Pallas kernel does in VMEM);
+  * ``bisect``  -- log2(2e) halving steps of single gathers (fewer bytes for
+                   large e; what a CPU would do).
+
+float32 keys: interpolation subtracts the segment start *before* rounding, so
+provided per-segment key spans stay < 2^24 the f32 math is exact for integer
+keys; ``rescale_keys`` maps arbitrary float64 keys into a safe range.
+"""
+from __future__ import annotations
+
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .segmentation import Segments, shrinking_cone
+
+
+class DeviceIndex(NamedTuple):
+    seg_start: jax.Array  # (S,) f32  first key of each segment
+    slope: jax.Array      # (S,) f32
+    base: jax.Array       # (S,) i32  global position of segment start
+    seg_end: jax.Array    # (S,) i32  global position one past the segment end
+    keys: jax.Array       # (N,) f32  the sorted key column (HBM resident)
+    error: int            # static
+
+
+def build_device_index(keys: np.ndarray, error: int,
+                       segs: Segments | None = None) -> DeviceIndex:
+    keys = np.asarray(keys)
+    if segs is None:
+        segs = shrinking_cone(keys.astype(np.float64), error)
+    base = np.asarray(segs.base, np.int64)
+    seg_end = np.concatenate([base[1:], [keys.shape[0]]])
+    return DeviceIndex(
+        seg_start=jnp.asarray(segs.start_key, jnp.float32),
+        slope=jnp.asarray(segs.slope, jnp.float32),
+        base=jnp.asarray(base, jnp.int32),
+        seg_end=jnp.asarray(seg_end, jnp.int32),
+        keys=jnp.asarray(keys, jnp.float32),
+        error=int(error),
+    )
+
+
+def rescale_keys(keys: np.ndarray) -> tuple[np.ndarray, float, float]:
+    """Affine-map keys into [0, 2^23] so f32 interpolation stays exact-ish."""
+    lo, hi = float(keys[0]), float(keys[-1])
+    scale = (2.0 ** 23) / max(hi - lo, 1.0)
+    return (keys - lo) * scale, lo, scale
+
+
+def predict_positions(idx: DeviceIndex, queries: jax.Array) -> jax.Array:
+    """Interpolated (approximate) global positions; error <= idx.error by Eq. 1.
+
+    Predictions are clamped to the segment's position range so queries falling
+    in inter-segment key gaps cannot overshoot (their true rank is the next
+    segment's base, which stays inside the clamped +-error window)."""
+    sid = jnp.clip(jnp.searchsorted(idx.seg_start, queries, side="right") - 1,
+                   0, idx.seg_start.shape[0] - 1)
+    local = (queries - idx.seg_start[sid]) * idx.slope[sid]
+    pred = idx.base[sid] + jnp.round(local).astype(jnp.int32)
+    return jnp.clip(pred, idx.base[sid], idx.seg_end[sid])
+
+
+def lookup(idx: DeviceIndex, queries: jax.Array,
+           strategy: Literal["window", "bisect"] = "window") -> jax.Array:
+    """Batched point lookup.  Returns the rank (global position) of each query
+    in ``idx.keys`` or -1 if absent.  jit-safe; ``error`` is static."""
+    n = idx.keys.shape[0]
+    pred = predict_positions(idx, queries)
+    e = idx.error
+    if strategy == "window":
+        w = 2 * e + 2
+        start = jnp.clip(pred - e, 0, jnp.maximum(n - w, 0)).astype(jnp.int32)
+        offs = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        vals = idx.keys[jnp.minimum(offs, n - 1)]
+        lt = (vals < queries[:, None]).sum(axis=1).astype(jnp.int32)
+        rank = start + lt
+        hit = (vals == queries[:, None]).any(axis=1)
+        return jnp.where(hit, rank, -1)
+    # bisect: lo/hi halving on the clipped window
+    lo = jnp.clip(pred - e, 0, n).astype(jnp.int32)
+    hi = jnp.clip(pred + e + 1, 0, n).astype(jnp.int32)
+    steps = int(np.ceil(np.log2(2 * e + 2)))
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        v = idx.keys[jnp.minimum(mid, n - 1)]
+        go = (v < queries) & (lo < hi)
+        return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    ok = (lo < n) & (idx.keys[jnp.minimum(lo, n - 1)] == queries)
+    return jnp.where(ok, lo, -1)
+
+
+def bound(idx: DeviceIndex, q: jax.Array, side: Literal["left", "right"] = "left"
+          ) -> jax.Array:
+    """Batched lower/upper bound rank via the bounded bisect (O(log error))."""
+    n = idx.keys.shape[0]
+    pred = predict_positions(idx, q)
+    lo = jnp.clip(pred - idx.error, 0, n).astype(jnp.int32)
+    hi = jnp.clip(pred + idx.error + 1, 0, n).astype(jnp.int32)
+    steps = int(np.ceil(np.log2(2 * idx.error + 2)))
+
+    def body(_, lh):
+        l, h = lh
+        mid = (l + h) // 2
+        v = idx.keys[jnp.minimum(mid, n - 1)]
+        go = ((v < q) if side == "left" else (v <= q)) & (l < h)
+        return jnp.where(go, mid + 1, l), jnp.where(go, h, mid)
+
+    l, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return l
+
+
+def range_count(idx: DeviceIndex, lo_q: jax.Array, hi_q: jax.Array) -> jax.Array:
+    """Batched range-count: #keys in [lo_q, hi_q] (duplicates included)."""
+    return bound(idx, hi_q, "right") - bound(idx, lo_q, "left")

@@ -1,0 +1,266 @@
+"""FITing-Tree / A-Tree: the host-side index structure (Secs. 2, 4, 5).
+
+Layout (clustered index, Fig. 2):
+  * table data is partitioned into *variable-sized pages*, one per segment;
+  * per segment we keep (start_key, slope) -- 24B of metadata in the paper's
+    accounting -- organized in an array-packed router (the paper's inner B+ tree;
+    see DESIGN.md Sec. 2 for why pointer-chasing is replaced by packed arrays);
+  * each page carries a bounded sorted insert buffer (Sec. 5); the segmentation
+    error budget is transparently err_seg = error - buffer_size so the
+    user-visible bound still holds when elements sit in the buffer.
+
+Lookup (Alg. 3): router -> segment, interpolate, binary-search the +-err window
+of the page, then the buffer.  Insert (Alg. 4): append to the buffer; on
+overflow merge + re-run ShrinkingCone and splice the new segments in.
+
+A non-clustered index (Fig. 3) is the same structure over the *sorted key
+column* with a parallel payload array per page (pointers into the table).
+"""
+from __future__ import annotations
+
+import bisect
+import math
+
+import numpy as np
+
+from .segmentation import Mode, Segments, shrinking_cone
+
+
+class PackedRouter:
+    """Array-packed static B+-tree over segment start keys.
+
+    Semantically equivalent to searchsorted over the leaf array (tests assert
+    this); exists to make the paper's log_b(S) tree-search term concrete:
+    ``height`` and ``size_bytes`` feed the Sec. 6 cost model.
+    """
+
+    def __init__(self, leaf_keys: np.ndarray, fanout: int = 16):
+        self.fanout = fanout
+        self.levels: list[np.ndarray] = [np.asarray(leaf_keys, np.float64)]
+        while self.levels[-1].shape[0] > fanout:
+            self.levels.append(self.levels[-1][::fanout])
+        self.levels.reverse()  # levels[0] = root
+
+    @property
+    def height(self) -> int:
+        return len(self.levels)
+
+    def size_bytes(self) -> int:
+        # 8B key + 8B pointer per entry, all levels (pessimistic, like Sec. 6.2)
+        return int(sum(lvl.shape[0] for lvl in self.levels) * 16)
+
+    def descend(self, keys: np.ndarray) -> np.ndarray:
+        """Batched level-by-level descent (what the TPU kernel does)."""
+        keys = np.asarray(keys, np.float64)
+        node = np.zeros(keys.shape[0], dtype=np.int64)
+        b = self.fanout
+        for d, lvl in enumerate(self.levels):
+            lo = node * b
+            hi = np.minimum(lo + b, lvl.shape[0])
+            # branchless binary search inside each node slice
+            child = lo.copy()
+            span = int(np.max(hi - lo)) if lvl.shape[0] else 0
+            steps = max(1, math.ceil(math.log2(max(2, span))))
+            lo_i, hi_i = lo.copy(), hi.copy()
+            for _ in range(steps + 1):
+                mid = (lo_i + hi_i) // 2
+                mid_c = np.minimum(mid, lvl.shape[0] - 1)
+                go_right = (lvl[mid_c] <= keys) & (lo_i < hi_i)
+                lo_i = np.where(go_right, mid + 1, lo_i)
+                hi_i = np.where(go_right, hi_i, mid)
+            child = np.maximum(lo_i - 1, 0)
+            node = child
+        return node
+
+
+class FITingTree:
+    """The paper's index.  ``error`` is the user-visible max-error bound."""
+
+    def __init__(self, keys: np.ndarray, error: int, buffer_size: int = 0,
+                 mode: Mode = "paper", payload: np.ndarray | None = None,
+                 fanout: int = 16, assume_sorted: bool = False):
+        keys = np.asarray(keys, np.float64)
+        if not assume_sorted:
+            order = np.argsort(keys, kind="stable")
+            keys = keys[order]
+            if payload is not None:
+                payload = np.asarray(payload)[order]
+        if buffer_size >= error:
+            raise ValueError("buffer_size must be < error (Sec. 5)")
+        self.error = int(error)
+        self.buffer_size = int(buffer_size)
+        self.err_seg = int(error - buffer_size) if buffer_size else int(error)
+        self.mode: Mode = mode
+        self.fanout = fanout
+        self.clustered = payload is None
+
+        segs = shrinking_cone(keys, self.err_seg, mode=mode)
+        self._init_pages(keys, payload, segs)
+
+    # ------------------------------------------------------------------ build
+    def _init_pages(self, keys, payload, segs: Segments):
+        self.start_keys = segs.start_key.copy()
+        self.slopes = segs.slope.copy()
+        bounds = np.concatenate([segs.base, [keys.shape[0]]]).astype(np.int64)
+        self.pages = [keys[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
+        self.payloads = (None if payload is None else
+                         [payload[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)])
+        self.buffers: list[list[float]] = [[] for _ in range(segs.n_segments)]
+        self.buf_payloads: list[list] = [[] for _ in range(segs.n_segments)]
+        self.router = PackedRouter(self.start_keys, self.fanout)
+
+    # ----------------------------------------------------------------- sizing
+    @property
+    def n_segments(self) -> int:
+        return len(self.pages)
+
+    @property
+    def n_keys(self) -> int:
+        return int(sum(p.shape[0] for p in self.pages) + sum(len(b) for b in self.buffers))
+
+    def index_size_bytes(self) -> int:
+        """Sec. 6.2 accounting: segment metadata + router (tree) size."""
+        return self.n_segments * 24 + self.router.size_bytes()
+
+    # ----------------------------------------------------------------- lookup
+    def _segment_of(self, key: float) -> int:
+        sid = int(np.searchsorted(self.start_keys, key, side="right")) - 1
+        return min(max(sid, 0), self.n_segments - 1)
+
+    def _window(self, sid: int, key: float) -> tuple[int, int, int]:
+        page = self.pages[sid]
+        pred = (key - self.start_keys[sid]) * self.slopes[sid]
+        pred_i = int(round(pred))
+        lo = max(0, pred_i - self.err_seg)
+        hi = min(page.shape[0], pred_i + self.err_seg + 1)
+        return lo, hi, pred_i
+
+    def lookup(self, key: float):
+        """Alg. 3.  Returns (segment_id, offset, payload|None) or None if absent."""
+        sid = self._segment_of(key)
+        page = self.pages[sid]
+        lo, hi, _ = self._window(sid, key)
+        off = lo + int(np.searchsorted(page[lo:hi], key, side="left"))
+        if off < hi and off < page.shape[0] and page[off] == key:
+            val = None if self.payloads is None else self.payloads[sid][off]
+            return (sid, off, val)
+        buf = self.buffers[sid]
+        j = bisect.bisect_left(buf, key)
+        if j < len(buf) and buf[j] == key:
+            val = None if self.payloads is None else self.buf_payloads[sid][j]
+            return (sid, -(j + 1), val)
+        return None
+
+    def lookup_batch(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized membership probe over the *pages* (buffers excluded; the
+        benchmark path).  Implements the bounded-window binary search exactly as
+        the TPU kernel does: interpolate then log2(2*err) halving steps.
+        Returns the global rank of each found key, -1 if absent from pages."""
+        keys = np.asarray(keys, np.float64)
+        flat, bases = self._flat_view()
+        sid = np.clip(np.searchsorted(self.start_keys, keys, side="right") - 1,
+                      0, self.n_segments - 1)
+        counts = np.asarray([p.shape[0] for p in self.pages], np.int64)
+        pred = bases[sid] + np.rint((keys - self.start_keys[sid]) * self.slopes[sid])
+        lo = np.maximum(bases[sid], pred - self.err_seg).astype(np.int64)
+        hi = np.minimum(bases[sid] + counts[sid], pred + self.err_seg + 1).astype(np.int64)
+        steps = max(1, math.ceil(math.log2(2 * self.err_seg + 2)))
+        for _ in range(steps):
+            mid = (lo + hi) // 2
+            mid_c = np.minimum(mid, flat.shape[0] - 1)
+            go_right = (flat[mid_c] < keys) & (lo < hi)
+            lo = np.where(go_right, mid + 1, lo)
+            hi = np.where(go_right, hi, mid)
+        ok = (lo < flat.shape[0]) & (flat[np.minimum(lo, flat.shape[0] - 1)] == keys)
+        return np.where(ok, lo, -1)
+
+    def _flat_view(self):
+        if getattr(self, "_flat_cache", None) is None:
+            counts = np.asarray([p.shape[0] for p in self.pages], np.int64)
+            bases = np.concatenate([[0], np.cumsum(counts)[:-1]])
+            self._flat_cache = (np.concatenate(self.pages), bases)
+        return self._flat_cache
+
+    def range_query(self, lo_key: float, hi_key: float) -> np.ndarray:
+        """Sec. 4.2: locate the start, then scan forward merging page + buffer."""
+        out = []
+        sid = self._segment_of(lo_key)
+        while sid < self.n_segments:
+            page = self.pages[sid]
+            if page.shape[0] and page[0] > hi_key:
+                break
+            a = np.searchsorted(page, lo_key, side="left")
+            b = np.searchsorted(page, hi_key, side="right")
+            out.append(page[a:b])
+            buf = self.buffers[sid]
+            if buf:
+                i = bisect.bisect_left(buf, lo_key)
+                j = bisect.bisect_right(buf, hi_key)
+                out.append(np.asarray(buf[i:j], np.float64))
+            sid += 1
+        if not out:
+            return np.empty(0, np.float64)
+        return np.sort(np.concatenate(out))
+
+    # ----------------------------------------------------------------- insert
+    def insert(self, key: float, value=None) -> None:
+        """Alg. 4: buffer the key; merge + re-segment on overflow."""
+        if self.buffer_size == 0:
+            raise ValueError("tree built read-only (buffer_size=0)")
+        sid = self._segment_of(key)
+        buf = self.buffers[sid]
+        j = bisect.bisect_left(buf, key)
+        buf.insert(j, key)
+        if self.payloads is not None:
+            self.buf_payloads[sid].insert(j, value)
+        self._flat_cache = None
+        if len(buf) >= self.buffer_size:
+            self._merge_segment(sid)
+
+    def _merge_segment(self, sid: int) -> None:
+        """Alg. 4 lines 5-9: merge buffer into the page, re-run ShrinkingCone,
+        replace one segment with k >= 1 new ones."""
+        page = self.pages[sid]
+        buf = np.asarray(self.buffers[sid], np.float64)
+        merged = np.empty(page.shape[0] + buf.shape[0], np.float64)
+        pos = np.searchsorted(page, buf, side="right") + np.arange(buf.shape[0])
+        mask = np.zeros(merged.shape[0], bool)
+        mask[pos] = True
+        merged[mask] = buf
+        merged[~mask] = page
+        if self.payloads is not None:
+            pl_page = self.payloads[sid]
+            pl_buf = np.asarray(self.buf_payloads[sid])
+            pl_merged = np.empty(merged.shape[0], pl_page.dtype)
+            pl_merged[mask] = pl_buf
+            pl_merged[~mask] = pl_page
+        segs = shrinking_cone(merged, self.err_seg, mode=self.mode)
+        bounds = np.concatenate([segs.base, [merged.shape[0]]]).astype(np.int64)
+        new_pages = [merged[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
+        self.pages[sid:sid + 1] = new_pages
+        self.buffers[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
+        if self.payloads is not None:
+            self.payloads[sid:sid + 1] = [pl_merged[bounds[i]:bounds[i + 1]]
+                                          for i in range(segs.n_segments)]
+            self.buf_payloads[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
+        else:
+            self.buf_payloads[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
+        self.start_keys = np.concatenate([
+            self.start_keys[:sid], segs.start_key, self.start_keys[sid + 1:]])
+        self.slopes = np.concatenate([
+            self.slopes[:sid], segs.slope, self.slopes[sid + 1:]])
+        self.router = PackedRouter(self.start_keys, self.fanout)
+        self._flat_cache = None
+
+    # ------------------------------------------------------------ invariants
+    def max_abs_error(self) -> float:
+        """Verify Eq. 1 over every page element (buffers are covered by the
+        err_seg + buffer_size <= error budget, Sec. 5)."""
+        worst = 0.0
+        for sid, page in enumerate(self.pages):
+            if page.shape[0] <= 1:
+                continue
+            pred = (page - self.start_keys[sid]) * self.slopes[sid]
+            true = np.arange(page.shape[0], dtype=np.float64)
+            worst = max(worst, float(np.max(np.abs(pred - true))))
+        return worst

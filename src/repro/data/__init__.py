@@ -1,0 +1,1 @@
+"""Learned-index-backed data pipeline."""

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for batched FITing-Tree lookups (the paper's hot path).
+
+TPU-native formulation (DESIGN.md Sec. 2): after the (cheap, XLA-side) router
+pass predicts each query's position, every query owns a +-error *window* of the
+sorted key column.  Queries are bucketed by the key block their window starts
+in; the kernel walks the key blocks sequentially and answers each block's
+bucket with a **gather-free masked compare-reduce**:
+
+    rank(q)  = window_start + #{ j in window : keys[j] < q }
+    found(q) = any( j in window : keys[j] == q )
+
+Because a window (2e+2 keys, e = error) never spans more than two consecutive
+key blocks when KB >= 2e+2, each grid step DMAs exactly two KB-sized key blocks
+HBM->VMEM plus its QCAP-query bucket, and writes the bucket's answers.  All
+shapes are static; there is no gather, no branch, no revisit -- pure VPU
+compare+sum over a (QCAP, 2*KB) tile.
+
+Memory per grid step (VMEM): 2*KB*4 B of keys + QCAP*(4+4) B of queries/starts
++ QCAP*8 B of outputs -- a few tens of KB, far under the ~16 MB VMEM budget;
+KB and QCAP are 128-aligned for the 8x128 VPU lanes.
+
+Bucket overflow (more than QCAP windows starting in one block) is detected in
+the wrapper and those queries fall back to the XLA bisect path (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lookup_kernel(keys_a_ref, keys_b_ref, q_ref, qlo_ref,
+                   rank_ref, found_ref, *, kb: int, window: int):
+    b = pl.program_id(0)
+    base = b * kb
+    keys2 = jnp.concatenate([keys_a_ref[...], keys_b_ref[...]])        # (2*KB,)
+    q = q_ref[0, :]                                                    # (QCAP,)
+    qlo = qlo_ref[0, :]                                                # (QCAP,) global
+    j_global = base + jax.lax.iota(jnp.int32, 2 * kb)                  # (2*KB,)
+    in_win = ((j_global[None, :] >= qlo[:, None]) &
+              (j_global[None, :] < qlo[:, None] + window))             # (QCAP, 2KB)
+    lt = in_win & (keys2[None, :] < q[:, None])
+    eq = in_win & (keys2[None, :] == q[:, None])
+    rank_ref[0, :] = qlo + jnp.sum(lt.astype(jnp.int32), axis=1)
+    found_ref[0, :] = jnp.any(eq, axis=1)
+
+
+def fitting_lookup_pallas(keys_padded: jax.Array, q_bucketed: jax.Array,
+                          qlo_bucketed: jax.Array, *, kb: int, window: int,
+                          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Run the kernel over all key blocks.
+
+    Args:
+      keys_padded:  (n_blocks*KB,) f32, padded with +inf.
+      q_bucketed:   (n_blocks, QCAP) f32 queries (+inf padding).
+      qlo_bucketed: (n_blocks, QCAP) i32 global window starts
+                    (must satisfy qlo // KB == block row).
+      kb:           key block size (multiple of 128, >= window).
+      window:       2*error + 2.
+    Returns:
+      rank:  (n_blocks, QCAP) i32 -- global rank of each bucketed query.
+      found: (n_blocks, QCAP) bool.
+    """
+    n_blocks, qcap = q_bucketed.shape
+    assert keys_padded.shape[0] == n_blocks * kb
+    assert window <= kb, (window, kb)
+    last = n_blocks - 1
+
+    grid_spec = pl.GridSpec(
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((kb,), lambda b: (b,)),                     # keys block b
+            pl.BlockSpec((kb,), lambda b, _l=last: (jnp.minimum(b + 1, _l),)),
+            pl.BlockSpec((1, qcap), lambda b: (b, 0)),               # bucket queries
+            pl.BlockSpec((1, qcap), lambda b: (b, 0)),               # bucket starts
+        ],
+        out_specs=[
+            pl.BlockSpec((1, qcap), lambda b: (b, 0)),
+            pl.BlockSpec((1, qcap), lambda b: (b, 0)),
+        ],
+    )
+    kernel = functools.partial(_lookup_kernel, kb=kb, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, qcap), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, qcap), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(keys_padded, keys_padded, q_bucketed, qlo_bucketed)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately *independent* of the index machinery: ranks come from a full
+searchsorted over the key column, so any interpolation/window/bucketing bug in
+the kernel path shows up as a mismatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lookup_ref(keys: jax.Array, queries: jax.Array) -> jax.Array:
+    """Global rank of each query in the sorted `keys`, or -1 if absent."""
+    rank = jnp.searchsorted(keys, queries, side="left")
+    n = keys.shape[0]
+    hit = (rank < n) & (keys[jnp.minimum(rank, n - 1)] == queries)
+    return jnp.where(hit, rank, -1).astype(jnp.int32)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None):
+    """Masked multi-head attention oracle.  q,k,v: (B, H, T, D) / (B, H, S, D)."""
+    t, s = q.shape[-2], k.shape[-2]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(t)[:, None] + (s - t)   # align ends (decode-friendly)
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def rglru_ref(x, a_log, gate_x, gate_a):
+    """RG-LRU oracle (RecurrentGemma Eq. 1-4), sequential scan over time.
+
+    x, gate_x, gate_a: (B, T, D); a_log: (D,) learned log-decay.
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+    with a_t = exp(-c * softplus(a_log) * sigmoid(gate_a)), i_t = sigmoid(gate_x).
+    """
+    c = 8.0
+    a = jnp.exp(-c * jax.nn.softplus(a_log)[None, None, :] *
+                jax.nn.sigmoid(gate_a))
+    gated = jax.nn.sigmoid(gate_x) * x
+    mult = jnp.sqrt(jnp.clip(1.0 - a ** 2, 1e-12, None)).astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, u_t = inp
+        h = a_t * h + u_t
+        return h, h
+
+    u = (mult * gated.astype(jnp.float32))
+    _, hs = jax.lax.scan(step, jnp.zeros(x.shape[::2], jnp.float32),
+                         (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                          jnp.moveaxis(u, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)

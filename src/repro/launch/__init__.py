@@ -1,0 +1,1 @@
+"""Mesh, shardings, specs, dry-run and drivers."""

@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init).  For each cell we record:
+  * compiled.memory_analysis()  -- bytes per device (proves it fits / doesn't)
+  * compiled.cost_analysis()    -- HLO FLOPs / bytes for SRoofline
+  * collective bytes parsed from the post-SPMD optimized HLO
+into experiments/dryrun/<cell>.json; benchmarks/roofline.py consumes these.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod|--both-meshes]
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.flops_count import count_flops
+from repro.launch.hlo_analysis import analyze_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_step_and_specs
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: pathlib.Path,
+             microbatches: int = 1, tag: str = "", policy: str = "2d") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = f"{arch}__{shape}__{mesh_name}" + (f"__{tag}" if tag else "")
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "cell": cell,
+           "microbatches": microbatches, "policy": policy}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        _write(out_dir, cell, rec)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        step, args, in_sh, out_sh, donate = make_step_and_specs(
+            arch, shape, mesh, microbatches=microbatches, policy=policy)
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        mem_rec = {}
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                mem_rec[attr] = int(getattr(mem, attr, 0) or 0)
+        cost_rec = {}
+        if cost:
+            for k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds"):
+                if k in cost:
+                    cost_rec[k.replace(" ", "_")] = float(cost[k])
+        hlo = compiled.as_text()
+        jaxpr = jax.make_jaxpr(step)(*args)
+        rec.update(status="ok", lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1), memory=mem_rec,
+                   cost=cost_rec, collectives=analyze_collectives(hlo),
+                   jaxpr_flops_global=count_flops(jaxpr),
+                   n_devices=mesh.devices.size)
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    _write(out_dir, cell, rec)
+    return rec
+
+
+def _write(out_dir: pathlib.Path, cell: str, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--policy", default="2d", choices=["2d", "zero3", "tp"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    n_ok = n_skip = n_err = 0
+    for a, s in cells:
+        for mp in meshes:
+            # skip if already recorded (idempotent sweeps)
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            cell = f"{a}__{s}__{mesh_name}" + (f"__{args.tag}" if args.tag else "")
+            f = out / f"{cell}.json"
+            if f.exists() and json.loads(f.read_text()).get("status") == "ok":
+                print(f"[cached] {cell}")
+                n_ok += 1
+                continue
+            rec = run_cell(a, s, mp, out, args.microbatches, args.tag,
+                           args.policy)
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_err += st == "error"
+            extra = ""
+            if st == "ok":
+                extra = (f"compile={rec['compile_s']}s "
+                         f"flops={rec['cost'].get('flops', 0):.3e} "
+                         f"coll={rec['collectives']['total_collective_bytes']:.3e}B")
+            elif st == "error":
+                extra = rec["error"][:200]
+            print(f"[{st}] {cell} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

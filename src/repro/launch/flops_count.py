@@ -1,0 +1,76 @@
+"""Jaxpr-level FLOP counting with correct scan/loop multiplicities.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless of
+trip count (verified on this container: a 24-layer scanned model reports
+~1/24th of its matmul FLOPs), so the roofline's compute term derives from the
+jaxpr instead: dot_general/conv FLOPs, with scan bodies multiplied by their
+length, remat/pjit/custom-vjp recursed.  This counts the *compiled program's*
+work (remat recompute included) -- the MODEL_FLOPS/jaxpr_flops ratio in
+SRoofline is exactly the remat/redundancy waste measure the brief asks for.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax import core
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dims
+    m = np.prod([d for i, d in enumerate(a.shape)
+                 if i not in lc and i not in lb], initial=1.0)
+    n = np.prod([d for i, d in enumerate(b.shape)
+                 if i not in rc and i not in rb], initial=1.0)
+    k = np.prod([a.shape[i] for i in lc], initial=1.0)
+    batch = np.prod([a.shape[i] for i in lb], initial=1.0)
+    return 2.0 * batch * m * n * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # flops = 2 * out_elems * (k_spatial * in_feat)
+    k_elems = np.prod(rhs.shape, initial=1.0) / max(rhs.shape[-1], 1)
+    return 2.0 * np.prod(out.shape, initial=1.0) * k_elems
+
+
+_SUBJAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr",
+                    "body_jaxpr", "branches")
+
+
+def count_flops(jaxpr) -> float:
+    """Total dot/conv FLOPs of a (Closed)Jaxpr, loop-aware."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            total += _conv_flops(eqn)
+        elif name == "scan":
+            inner = count_flops(eqn.params["jaxpr"])
+            total += inner * eqn.params["length"]
+        elif name == "shard_map":
+            # the body jaxpr is PER-SHARD work; scale to global by mesh size
+            inner = count_flops(eqn.params["jaxpr"])
+            total += inner * getattr(eqn.params["mesh"], "size", 1)
+        elif name == "while":
+            # bounded fori_loops: trip count unknown statically here; our
+            # models use scan exclusively, so treat one trip (flagged by
+            # callers if a while is ever seen)
+            total += count_flops(eqn.params["body_jaxpr"])
+        elif name == "cond":
+            total += max(count_flops(b) for b in eqn.params["branches"])
+        else:
+            for pname in _SUBJAXPR_PARAMS:
+                if pname in eqn.params:
+                    v = eqn.params[pname]
+                    if pname == "branches":
+                        total += max(count_flops(b) for b in v)
+                    else:
+                        total += count_flops(v)
+                    break
+    return total

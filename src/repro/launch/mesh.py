@@ -1,0 +1,29 @@
+"""Production mesh builder.  A FUNCTION (not a module constant) so importing
+this module never touches jax device state (the dry-run forces 512 host
+devices via XLA_FLAGS *before* any jax import; tests/benches see 1 device)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) data x model single-pod; (2,16,16) pod x data x model multi-pod.
+
+    The `pod` axis is pure data parallelism: only the gradient all-reduce
+    crosses the data-center interconnect; FSDP weight gathers and TP
+    collectives stay on intra-pod ICI (DESIGN.md Sec. 5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axis names for this mesh (pod included if present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_host_mesh(n_devices: int | None = None, model_parallel: int = 1):
+    """Small mesh over the actually-available devices (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

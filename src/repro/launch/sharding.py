@@ -1,0 +1,185 @@
+"""Sharding rules: param/optimizer/activation/cache PartitionSpecs.
+
+2D weight sharding (MaxText-style): FSDP over `data`, tensor parallel over
+`model`, expert parallel (MoE expert dim) over `model`; `pod` is pure DP.
+Rules are name+shape based over the init_params tree, so every architecture
+gets coherent specs without per-arch spec trees.  GSPMD inserts collectives;
+the dry-run HLO is where we verify what it chose (EXPERIMENTS.md SDry-run).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP, TP = "data", "model"
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(p.key)
+        elif hasattr(p, "name"):
+            out.append(p.name)
+    return out
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return dim % mesh.shape[axis] == 0
+
+
+def param_spec(path, leaf, mesh: Mesh, policy: str = "2d") -> P:
+    """PartitionSpec for one parameter leaf.
+
+    policy="2d"    -- FSDP over `data` x TP over `model` (Megatron-style);
+                      activations pay two TP all-reduces per layer.
+    policy="zero3" -- weights sharded over BOTH axes on dim0, no tensor
+                      parallelism: XLA gathers each layer's weights
+                      (param-sized collectives) and computes locally; the
+                      batch shards over every mesh axis.  Wins whenever
+                      activation bytes/layer >> weight bytes/layer
+                      (small-to-mid dense models at big B*T: SPerf cell B).
+    policy="tp"    -- TP over `model` only, weights replicated over `data`
+                      (no per-step weight gathers: the decode-serving policy).
+    """
+    names = _path_names(path)
+    name = names[-1]
+    shape = leaf.shape
+    stacked = any(n.startswith("s") and n[1:].isdigit() for n in names)
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+
+    if policy == "zero3" and len(body) >= 1:
+        axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        spec = [None] * len(body)
+        if body[0] % size == 0:
+            spec[0] = axes
+        elif body[0] % mesh.shape["data"] == 0:
+            spec[0] = "data"
+        elif len(body) > 1 and body[1] % mesh.shape["data"] == 0:
+            spec[1] = "data"
+        return P(*(lead + tuple(spec)))
+
+    def ok(spec_tail):
+        # only shard divisible dims; replace non-divisible entries with None
+        fixed = []
+        for dim, ax in zip(body, spec_tail):
+            if ax is None:
+                fixed.append(None)
+            elif isinstance(ax, tuple):
+                size = int(np.prod([mesh.shape[a] for a in ax]))
+                fixed.append(ax if dim % size == 0 else None)
+            else:
+                fixed.append(ax if _divisible(dim, mesh, ax) else None)
+        return P(*(lead + tuple(fixed)))
+
+    if name == "embed":
+        return ok((TP, FSDP))
+    if name == "unembed":
+        return ok((FSDP, TP))
+    if len(body) <= 1:
+        return P(*(lead + (None,) * len(body)))
+    # MoE experts: (E, D, F) / (E, F, D) -> EP over model
+    if name in ("wi", "wg") and len(body) == 3:
+        return ok((TP, FSDP, None))
+    if name == "wo" and len(body) == 3:
+        return ok((TP, None, FSDP))
+    if name == "router":
+        return ok((FSDP, None))
+    # attention / mlp 2D mats: first proj (D, X) -> (fsdp, tp);
+    # output proj back to d_model -> (tp, fsdp)
+    if name in ("wq", "wk", "wv", "wi", "wg", "wx", "wy", "up", "wu"):
+        return ok((FSDP, TP))
+    if name in ("wo", "down"):
+        return ok((TP, FSDP))
+    # recurrent-family square/gate mats and mlstm internals: FSDP only --
+    # their inner width doesn't split cleanly over TP (DESIGN.md Sec. 4 note)
+    return ok((FSDP, None))
+
+
+def _strip_axis(spec: P, axis: str) -> P:
+    out = []
+    for e in spec:
+        if e == axis:
+            out.append(None)
+        elif isinstance(e, tuple):
+            kept = tuple(a for a in e if a != axis)
+            out.append(kept if kept else None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params_shapes: Any, policy: str = "2d"):
+    def pick(path, leaf):
+        spec = param_spec(path, leaf, mesh,
+                          policy if policy == "zero3" else "2d")
+        if policy == "tp":      # weights replicated over `data`: serve policy
+            spec = _strip_axis(spec, FSDP)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(pick, params_shapes)
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int, policy: str = "2d") -> P:
+    """Shard the leading batch dim over every data-parallel axis that fits.
+    zero3: no tensor axis is reserved, so the batch shards over `model` too."""
+    pool = ("pod", "data", "model") if policy == "zero3" else ("pod", "data")
+    axes = [a for a in pool if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % size == 0 and size > 1:
+        return P(tuple(axes), *([None] * (ndim - 1)))
+    if "data" in mesh.axis_names and batch % mesh.shape["data"] == 0:
+        return P("data", *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def cache_spec(mesh: Mesh, leaf, batch: int) -> P:
+    """KV caches / recurrent states: batch over DP; then kv-heads or cache
+    length over TP (sequence-parallel KV for small-batch long-context)."""
+    shape = leaf.shape
+    # leading stack-repeat dim, then batch
+    assert len(shape) >= 2
+    b_idx = 1
+    spec = [None] * len(shape)
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    dp = int(np.prod([mesh.shape[a] for a in axes]))
+    if shape[b_idx] % dp == 0 and dp > 1:
+        spec[b_idx] = tuple(axes)
+    elif shape[b_idx] % mesh.shape["data"] == 0:
+        spec[b_idx] = "data"
+    tp = mesh.shape[TP]
+    # (R, B, L, Kv, hd): prefer kv-head sharding, else length (SP)
+    if len(shape) == 5:
+        if shape[3] % tp == 0:
+            spec[3] = TP
+        elif shape[2] % tp == 0:
+            spec[2] = TP
+    elif len(shape) >= 3 and shape[-1] % tp == 0 and spec[b_idx] != TP:
+        spec[-1] = TP
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, caches_shapes: Any, batch: int):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, cache_spec(mesh, leaf, batch)),
+        caches_shapes)
+
+
+def opt_shardings(mesh: Mesh, opt_shapes: Any, policy: str = "2d"):
+    """Adam m/v mirror the param sharding; scalars (step) replicated.
+    (policy="tp" keeps m/v FSDP-sharded anyway -- optimizer state need not
+    be replicated even when weights are.)"""
+    def pick(path, leaf):
+        names = _path_names(path)
+        if names and names[0] in ("m", "v"):
+            return NamedSharding(mesh, param_spec(
+                path[1:], leaf, mesh, policy if policy == "zero3" else "2d"))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(pick, opt_shapes)

@@ -1,0 +1,123 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns (step_kind, args_shapes) -- weak-type-correct,
+shardable, zero allocation; ``make_step_and_specs`` additionally binds the
+step function and the in/out sharding trees for a mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config, shape_applicable
+from repro.models import init_caches, init_params
+from repro.models.config import ModelConfig
+from repro.launch import sharding as sh
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: init_params(cfg, k, dtype=dtype),
+                          jax.random.key(0))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        functools.partial(init_caches, cfg, batch, cache_len))
+
+
+def input_specs(arch: str, shape: str) -> tuple[str, dict[str, Any]]:
+    """Returns (kind, shapes): every model input for this cell as SDS."""
+    cfg = get_config(arch)
+    s: ShapeSpec = SHAPES[shape]
+    b, t = s.global_batch, s.seq_len
+    mem = (SDS((b, cfg.memory_len, cfg.d_model), jnp.bfloat16)
+           if cfg.memory_len else None)
+    if s.kind == "train":
+        batch = {"tokens": SDS((b, t), jnp.int32)}
+        if mem is not None:
+            batch["memory"] = mem
+        return "train", {"batch": batch}
+    if s.kind == "prefill":
+        out = {"tokens": SDS((b, t), jnp.int32),
+               "caches": cache_shapes(get_config(arch), b, t)}
+        if mem is not None:
+            out["memory"] = mem
+        return "prefill", out
+    # decode: one new token against a cache of seq_len
+    out = {"tokens": SDS((b, 1), jnp.int32),
+           "pos": SDS((b,), jnp.int32),
+           "caches": cache_shapes(get_config(arch), b, t)}
+    return "decode", out
+
+
+def _with_act_sharding(fn, mesh, policy="2d"):
+    from repro.models.model import activation_sharding
+    dp_axes = ("pod", "data", "model") if policy == "zero3" else ("pod", "data")
+
+    @functools.wraps(fn)
+    def inner(*a, **k):
+        with activation_sharding(mesh, dp_axes):
+            return fn(*a, **k)
+    return inner
+
+
+def make_step_and_specs(arch: str, shape: str, mesh, *,
+                        microbatches: int = 1, donate: bool = True,
+                        policy: str = "2d"):
+    """Builds (fn, arg_shapes, in_shardings, out_shardings) for jit+lower.
+    policy: see launch/sharding.param_spec ("2d" | "zero3" | "tp")."""
+    cfg = get_config(arch)
+    kind, shapes = input_specs(arch, shape)
+    p_shapes = param_shapes(cfg)
+    p_sh = sh.param_shardings(mesh, p_shapes, policy)
+    repl = NamedSharding(mesh, P())
+
+    def data_sh(tree):
+        return jax.tree.map(
+            lambda l: NamedSharding(
+                mesh, sh.batch_spec(mesh, l.shape[0], len(l.shape), policy)),
+            tree)
+
+    if kind == "train":
+        opt_shapes = jax.eval_shape(lambda: init_opt_state(p_shapes))
+        opt_sh = sh.opt_shardings(mesh, opt_shapes, policy)
+        step = _with_act_sharding(
+            make_train_step(cfg, AdamWConfig(), microbatches=microbatches),
+            mesh, policy)
+        args = (p_shapes, opt_shapes, shapes["batch"])
+        in_sh = (p_sh, opt_sh, data_sh(shapes["batch"]))
+        out_sh = (p_sh, opt_sh, jax.tree.map(lambda _: repl, {
+            "grad_norm": 0, "lr": 0, "loss": 0}))
+        donate_argnums = (0, 1) if donate else ()
+        return step, args, in_sh, out_sh, donate_argnums
+
+    b = shapes["tokens"].shape[0]
+    c_sh = sh.cache_shardings(mesh, shapes["caches"], b)
+    tok_sh = data_sh({"t": shapes["tokens"]})["t"]
+    if kind == "prefill":
+        step = _with_act_sharding(make_prefill_step(cfg), mesh, policy)
+        args = [p_shapes, shapes["tokens"], shapes["caches"]]
+        in_sh = [p_sh, tok_sh, c_sh]
+        if "memory" in shapes:
+            args.append(shapes["memory"])
+            in_sh.append(data_sh({"m": shapes["memory"]})["m"])
+        out_sh = (NamedSharding(mesh, sh.batch_spec(mesh, b, 1)), c_sh)
+        donate_argnums = (2,) if donate else ()
+        return step, tuple(args), tuple(in_sh), out_sh, donate_argnums
+
+    step = _with_act_sharding(make_decode_step(cfg), mesh, policy)
+    args = (p_shapes, shapes["tokens"], shapes["pos"], shapes["caches"])
+    pos_sh = NamedSharding(mesh, sh.batch_spec(mesh, b, 1))
+    in_sh = (p_sh, tok_sh, pos_sh, c_sh)
+    out_sh = (pos_sh, c_sh)
+    donate_argnums = (3,) if donate else ()
+    return step, args, in_sh, out_sh, donate_argnums

@@ -1,0 +1,7 @@
+"""Composable LM stack: blocks, configs, init/forward/decode drivers."""
+from .config import ModelConfig, MoEConfig, simple_decoder
+from .model import (decode_step, forward, init_caches, init_params, loss_fn,
+                    prefill)
+
+__all__ = ["ModelConfig", "MoEConfig", "simple_decoder", "init_params",
+           "forward", "loss_fn", "init_caches", "prefill", "decode_step"]

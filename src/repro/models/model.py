@@ -1,0 +1,346 @@
+"""Model driver: init / forward / prefill / decode over pattern-scanned stacks.
+
+Params are stacked per repeating unit and scanned with ``jax.lax.scan`` (O(1)
+HLO in depth -> fast 512-device SPMD compiles) with per-layer remat in train
+mode.  Caches (KV rings / recurrent states) are scanned alongside params, so
+prefill/decode work uniformly for attention, hybrid and SSM families.
+
+Activation sharding: GSPMD does not reliably propagate the batch sharding
+through while-loop carries (verified in the dry-run HLO: without constraints
+the scan body runs with a replicated batch).  ``activation_sharding(mesh)``
+installs a trace-time context; the forward pass re-anchors (B, T, D)
+activations at the embed output, each scan-body entry, and the final hidden.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import blocks
+from .blocks import Ctx
+from .config import ModelConfig
+
+Params = Any
+
+from .act_ctx import activation_sharding, constrain_btd as _constrain_btd  # noqa: F401
+# (activation_sharding re-exported here: launch/ imports it from models.model)
+
+
+# ------------------------------------------------------------------ init
+def init_block(btype: str, cfg: ModelConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    ln = lambda: jnp.zeros((d,), dtype)
+    if btype in ("attn", "local", "enc"):
+        p = {"ln1": ln(), "attn": blocks.init_attention(cfg, ks[0], dtype=dtype),
+             "ln2": ln(), "mlp": blocks.init_mlp(cfg, ks[1], dtype=dtype)}
+    elif btype == "cross":
+        p = {"ln1": ln(), "attn": blocks.init_attention(cfg, ks[0], cross=True,
+                                                        dtype=dtype),
+             "ln2": ln(), "mlp": blocks.init_mlp(cfg, ks[1], dtype=dtype)}
+    elif btype == "self+cross":
+        p = {"ln1": ln(), "attn": blocks.init_attention(cfg, ks[0], dtype=dtype),
+             "lnc": ln(), "xattn": blocks.init_attention(cfg, ks[2], cross=True,
+                                                         dtype=dtype),
+             "ln2": ln(), "mlp": blocks.init_mlp(cfg, ks[1], dtype=dtype)}
+    elif btype == "moe":
+        p = {"ln1": ln(), "attn": blocks.init_attention(cfg, ks[0], dtype=dtype),
+             "ln2": ln(), "moe": blocks.init_moe(cfg, ks[1], dtype=dtype)}
+    elif btype == "rglru":
+        p = {"ln1": ln(), "rec": blocks.init_rglru(cfg, ks[0], dtype=dtype),
+             "ln2": ln(), "mlp": blocks.init_mlp(cfg, ks[1], dtype=dtype)}
+    elif btype == "mlstm":
+        p = {"ln1": ln(), "mix": blocks.init_mlstm(cfg, ks[0], dtype=dtype)}
+    elif btype == "slstm":
+        p = {"ln1": ln(), "mix": blocks.init_slstm(cfg, ks[0], dtype=dtype)}
+    else:
+        raise ValueError(btype)
+    if cfg.post_norm and btype not in ("mlstm", "slstm"):
+        p["ln1p"] = ln()
+        p["ln2p"] = ln()
+    return p
+
+
+def _init_stacks(stacks, cfg, key, dtype):
+    out = {}
+    for si, (unit, r) in enumerate(stacks):
+        key, sk = jax.random.split(key)
+        def one_layer(k):
+            kk = jax.random.split(k, len(unit))
+            return {f"b{bi}": init_block(bt, cfg, kk[bi], dtype)
+                    for bi, bt in enumerate(unit)}
+        out[f"s{si}"] = jax.vmap(one_layer)(jax.random.split(sk, r))
+    return out
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_stacks, k_enc, k_un = jax.random.split(key, 4)
+    p = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "stacks": _init_stacks(cfg.stacks, cfg, k_stacks, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(k_un, (cfg.d_model, cfg.vocab),
+                                         dtype) * 0.02
+    if cfg.encoder_stacks:
+        p["enc_stacks"] = _init_stacks(cfg.encoder_stacks, cfg, k_enc, dtype)
+        p["enc_final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ------------------------------------------------------------------ blocks
+def apply_block(btype: str, p: dict, x, cfg: ModelConfig, ctx: Ctx):
+    scale = cfg.residual_scale if cfg.residual_scale is not None else 1.0
+    eps = cfg.norm_eps
+
+    def residual(x, h, post_key):
+        if cfg.post_norm and post_key in p:
+            h = blocks.rmsnorm(p[post_key], h, eps)
+        return x + scale * h
+
+    if btype in ("attn", "local", "enc", "moe"):
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, cache = blocks.apply_attention(
+            p["attn"], h, cfg, ctx, causal=(btype != "enc"),
+            window=cfg.window if btype == "local" else None)
+        x = residual(x, h, "ln1p")
+        h = blocks.rmsnorm(p["ln2"], x, eps)
+        h = blocks.apply_moe(p["moe"], h, cfg) if btype == "moe" else \
+            blocks.apply_mlp(p["mlp"], h)
+        x = residual(x, h, "ln2p")
+        return x, cache
+    if btype == "cross":
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, cache = blocks.apply_attention(p["attn"], h, cfg, ctx, cross=True)
+        x = residual(x, h, "ln1p")
+        h = blocks.rmsnorm(p["ln2"], x, eps)
+        x = residual(x, blocks.apply_mlp(p["mlp"], h), "ln2p")
+        return x, cache
+    if btype == "self+cross":
+        sub_self = Ctx(ctx.mode, ctx.pos, ctx.memory,
+                       None if ctx.cache is None else ctx.cache["self"])
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, c_self = blocks.apply_attention(p["attn"], h, cfg, sub_self)
+        x = x + scale * h
+        sub_x = Ctx(ctx.mode, ctx.pos, ctx.memory,
+                    None if ctx.cache is None else ctx.cache["cross"])
+        h = blocks.rmsnorm(p["lnc"], x, eps)
+        h, c_cross = blocks.apply_attention(p["xattn"], h, cfg, sub_x, cross=True)
+        x = x + scale * h
+        h = blocks.rmsnorm(p["ln2"], x, eps)
+        x = x + scale * blocks.apply_mlp(p["mlp"], h)
+        cache = None if ctx.cache is None and ctx.mode == "train" else \
+            {"self": c_self, "cross": c_cross}
+        return x, cache
+    if btype == "rglru":
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, cache = blocks.apply_rglru(p["rec"], h, cfg, ctx)
+        x = x + scale * h
+        h = blocks.rmsnorm(p["ln2"], x, eps)
+        x = x + scale * blocks.apply_mlp(p["mlp"], h)
+        return x, cache
+    if btype == "mlstm":
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, cache = blocks.apply_mlstm(p["mix"], h, cfg, ctx)
+        return x + scale * h, cache
+    if btype == "slstm":
+        h = blocks.rmsnorm(p["ln1"], x, eps)
+        h, cache = blocks.apply_slstm(p["mix"], h, cfg, ctx)
+        return x + scale * h, cache
+    raise ValueError(btype)
+
+
+def _run_stacks(stack_params, stacks, x, cfg: ModelConfig, ctx_proto: Ctx,
+                caches, remat: bool):
+    new_caches = {}
+    for si, (unit, r) in enumerate(stacks):
+        sp = stack_params[f"s{si}"]
+        sc = None if caches is None else caches[f"s{si}"]
+
+        def body(carry, xs, unit=unit):
+            xx = _constrain_btd(carry)
+            lp, lc = xs
+            ncs = {}
+            for bi, bt in enumerate(unit):
+                ctx = Ctx(ctx_proto.mode, ctx_proto.pos, ctx_proto.memory,
+                          None if lc is None else lc[f"b{bi}"])
+                xx, nc = apply_block(bt, lp[f"b{bi}"], xx, cfg, ctx)
+                ncs[f"b{bi}"] = nc
+            return _constrain_btd(xx), ncs
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, ncs = jax.lax.scan(body, x, (sp, sc))
+        new_caches[f"s{si}"] = ncs
+    return x, new_caches
+
+
+# ------------------------------------------------------------------ forward
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            memory: Optional[jax.Array] = None, mode: str = "train",
+            pos: Optional[jax.Array] = None, caches=None, enc_caches=None,
+            remat: bool = True, return_hidden: bool = False):
+    """Returns (logits, new_caches).  tokens: (B, T) int32.
+
+    ``memory``: precomputed frontend embeddings (B, M, D) -- vision patches
+    (vlm) or audio frames (audio); run through encoder stacks if present.
+    """
+    b, t = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.emb_scale is not None:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    x = _constrain_btd(x)
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    if cfg.encoder_stacks and memory is not None and enc_caches is None:
+        mpos = jnp.broadcast_to(
+            jnp.arange(memory.shape[1], dtype=jnp.int32)[None],
+            memory.shape[:2])
+        ectx = Ctx("train", mpos, None, None)
+        memory, _ = _run_stacks(params["enc_stacks"], cfg.encoder_stacks,
+                                memory, cfg, ectx, None, remat=(mode == "train"))
+        memory = blocks.rmsnorm(params["enc_final_norm"], memory, cfg.norm_eps)
+    elif enc_caches is not None:
+        memory = enc_caches                     # precomputed encoder output
+
+    ctx = Ctx(mode, pos, memory, None)
+    x, new_caches = _run_stacks(params["stacks"], cfg.stacks, x, cfg, ctx,
+                                caches, remat=(mode == "train" and remat))
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    caches_out = new_caches if mode != "train" else None
+    if return_hidden:
+        return x, caches_out
+    return unembed(params, cfg, x), caches_out
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ un
+    if cfg.logit_scale is not None:
+        logits = logits * cfg.logit_scale
+    if cfg.final_softcap is not None:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    return logits
+
+
+LOSS_CHUNK = 512  # sequence chunk for the vocab projection + xent
+
+
+def loss_fn(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            memory: Optional[jax.Array] = None, remat: bool = True):
+    """Next-token cross entropy, chunked over the sequence so the (B,C,V)
+    logits of only one chunk are ever live (checkpointed scan body); a full
+    (B,S,V) fp32 logits tensor at 256k vocab would be TBs at the train shape.
+    """
+    b, t1 = tokens.shape
+    hidden, _ = forward(params, cfg, tokens, memory=memory, mode="train",
+                        remat=remat, return_hidden=True)
+    labels = jnp.roll(tokens, -1, axis=1)
+    weights = jnp.concatenate([jnp.ones((t1 - 1,)), jnp.zeros((1,))]).astype(
+        jnp.float32)
+    c = LOSS_CHUNK if t1 % LOSS_CHUNK == 0 else t1
+    nc = t1 // c
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_nll(h_c, y_c, w_c):
+        logits = unembed(params, cfg, _constrain_btd(h_c)).astype(jnp.float32)
+        from . import act_ctx
+        if act_ctx.mesh() is not None and "model" not in act_ctx.dp_axes():
+            logits = act_ctx.constrain(
+                logits, P(act_ctx.dp_axes(), None, "model"))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y_c[..., None], axis=-1)[..., 0]
+        return -jnp.sum(ll * w_c[None, :])
+
+    hs = jnp.moveaxis(hidden.reshape(b, nc, c, -1), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    ws = weights.reshape(nc, c)
+
+    def body(acc, xs):
+        return acc + chunk_nll(*xs), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros(()), (hs, ys, ws))
+    return total / (b * (t1 - 1))
+
+
+# ------------------------------------------------------------------ caches
+def init_block_cache(btype: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16):
+    if btype in ("attn", "moe"):
+        return blocks.init_attention_cache(cfg, batch, cache_len, dtype)
+    if btype == "local":
+        return blocks.init_attention_cache(cfg, batch,
+                                           min(cfg.window, cache_len), dtype)
+    if btype == "cross":
+        kv, hd = cfg.n_kv_heads, cfg.hd
+        return {"k": jnp.zeros((batch, cfg.memory_len, kv, hd), dtype),
+                "v": jnp.zeros((batch, cfg.memory_len, kv, hd), dtype)}
+    if btype == "self+cross":
+        return {"self": init_block_cache("attn", cfg, batch, cache_len, dtype),
+                "cross": init_block_cache("cross", cfg, batch, cache_len, dtype)}
+    if btype == "rglru":
+        return blocks.init_rglru_cache(cfg, batch, dtype)
+    if btype == "mlstm":
+        return blocks.init_mlstm_cache(cfg, batch)
+    if btype == "slstm":
+        return blocks.init_slstm_cache(cfg, batch)
+    raise ValueError(btype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, cache_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked (R, ...) caches per stack, matching the scan layout."""
+    out = {}
+    for si, (unit, r) in enumerate(cfg.stacks):
+        layer = {f"b{bi}": init_block_cache(bt, cfg, batch, cache_len, dtype)
+                 for bi, bt in enumerate(unit)}
+        out[f"s{si}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (r,) + a.shape), layer)
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation) -- feeds 6ND."""
+    import numpy as np
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+    return int(sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params touched per token: full count minus inactive experts."""
+    n = param_count(cfg)
+    if cfg.moe is None:
+        return n
+    m = cfg.moe
+    per_layer_inactive = (m.n_experts - m.top_k) * 3 * cfg.d_model * m.d_expert
+    n_moe = sum(r * sum(1 for b in u if b == "moe") for u, r in cfg.stacks)
+    return n - n_moe * per_layer_inactive
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                pos: jax.Array, caches, memory=None, enc_out=None):
+    """One decode step.  tokens: (B, 1); pos: (B,) absolute positions."""
+    logits, new_caches = forward(
+        params, cfg, tokens, memory=memory, mode="decode",
+        pos=pos[:, None], caches=caches, enc_caches=enc_out, remat=False)
+    return logits, new_caches
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            caches, memory=None, last_only: bool = False):
+    """last_only=True returns only the final position's logits (the serving
+    path: a full (B, 32k, 256k-vocab) logits tensor is never needed)."""
+    hidden, new_caches = forward(params, cfg, tokens, memory=memory,
+                                 mode="prefill", caches=caches, remat=False,
+                                 return_hidden=True)
+    if last_only:
+        hidden = hidden[:, -1:]
+    return unembed(params, cfg, hidden), new_caches

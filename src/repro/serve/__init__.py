@@ -1,0 +1,1 @@
+"""Serving steps, paged KV cache, batching."""

@@ -1,0 +1,105 @@
+"""Continuous batching: fixed decode slots, prefill-on-admit, evict-on-done.
+
+A request arrives with a prompt; when a slot frees up the scheduler prefills
+it (right-padded into the slot's ring caches via per-slot positions) and the
+shared decode step advances every active slot one token per tick.  This is
+the standard continuous-batching loop (Orca/vLLM) on top of model.prefill /
+model.decode_step; slot caches are the per-slot slices of one batched cache
+pytree, so the decode step stays a single jitted call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, init_caches, prefill
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (L,) int32
+    max_new: int = 32
+    eos: int = -1                # -1: never
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 cache_len: int = 512, dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.cache_len = cache_len
+        self.caches = init_caches(cfg, n_slots, cache_len, dtype=dtype)
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, cfg, t, pos, c))
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.n_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self._prefill_slot(s, req)
+
+    def _prefill_slot(self, s: int, req: Request):
+        """Prefill one slot: runs the model at batch=1 and writes the slot's
+        cache slice (slot caches share the batch dim)."""
+        one = init_caches(self.cfg, 1, self.cache_len,
+                          dtype=jnp.float32)
+        logits, one = prefill(self.params, self.cfg,
+                              jnp.asarray(req.prompt[None], jnp.int32), one,
+                              last_only=True)
+        nxt = int(np.argmax(np.asarray(logits[0, -1])))
+        req.out.append(nxt)
+        self.caches = jax.tree.map(
+            lambda full, new: full.at[:, s: s + 1].set(new), self.caches, one)
+        self.slot_req[s] = req
+        self.slot_pos[s] = req.prompt.shape[0]
+
+    def tick(self):
+        """One scheduler tick: admit waiting requests, decode one token for
+        every active slot, retire finished requests."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return False
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            tokens[s, 0] = self.slot_req[s].out[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tokens),
+            jnp.asarray(self.slot_pos), self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            tok = int(nxt[s])
+            req.out.append(tok)
+            self.slot_pos[s] += 1
+            if (len(req.out) >= req.max_new or tok == req.eos
+                    or self.slot_pos[s] >= self.cache_len - 1):
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+                self.slot_pos[s] = 0
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> int:
+        ticks = 0
+        while (self.queue or any(self.slot_req)) and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return ticks

@@ -1,0 +1,26 @@
+"""Serve steps: prefill (last-token logits) and greedy decode, cache-threaded."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, caches, memory=None):
+        logits, caches = prefill(params, cfg, tokens, caches, memory=memory,
+                                 last_only=True)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_fn(params, tokens, pos, caches):
+        """tokens: (B,1) current token; pos: (B,) its absolute position."""
+        logits, caches = decode_step(params, cfg, tokens, pos, caches)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return decode_fn

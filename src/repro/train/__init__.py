@@ -1,0 +1,1 @@
+"""Train step, optimizer, schedules, compression."""

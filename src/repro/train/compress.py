@@ -1,0 +1,45 @@
+"""int8 error-feedback gradient compression (cross-pod all-reduce trick).
+
+On a multi-pod mesh the gradient all-reduce over the `pod` axis crosses the
+data-center interconnect (~10x slower than ICI).  Quantizing pod-crossing
+gradients to int8 with per-tensor scales cuts those bytes 4x (vs f32
+accumulators); the *error-feedback residual* re-injects quantization error on
+the next step, which keeps SGD/Adam convergence unbiased (Karimireddy et al.,
+2019).
+
+Numerics are exact to the wire format; on this container the actual reduction
+still happens in XLA (the dry-run's collective bytes drop is what a real
+deployment would see with a custom int8 reduction -- recorded in
+EXPERIMENTS.md SPerf).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Returns (dequantized grads, new residual).  Per-tensor symmetric int8."""
+
+    def one(g, r):
+        g = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-30) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        dq = q.astype(jnp.float32) * scale
+        return dq, g - dq
+
+    flat, tdef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat, rflat)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+# NOTE: the residual is jit-state -- it lives in opt_state["residual"]
+# (train/step.py threads it through the step), NOT host-side.

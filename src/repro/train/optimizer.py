@@ -1,0 +1,91 @@
+"""AdamW + LR schedules, implemented from scratch (no optax in this image).
+
+State is a pytree {m, v, step}; m/v are fp32 and shard exactly like params
+(launch/sharding.opt_shardings).  Schedules include WSD (warmup-stable-decay,
+the MiniCPM paper's schedule) and cosine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"          # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1           # WSD: fraction of steps in decay phase
+
+
+def schedule_fn(c: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(c.warmup_steps, 1), 1.0)
+        if c.schedule == "const":
+            return c.lr * warm
+        if c.schedule == "cosine":
+            t = jnp.clip((s - c.warmup_steps) /
+                         jnp.maximum(c.total_steps - c.warmup_steps, 1), 0, 1)
+            return c.lr * warm * (0.5 * (1 + jnp.cos(jnp.pi * t)))
+        if c.schedule == "wsd":
+            # warmup -> stable at lr -> sqrt-style decay in the final fraction
+            decay_start = c.total_steps * (1.0 - c.decay_frac)
+            t = jnp.clip((s - decay_start) /
+                         jnp.maximum(c.total_steps - decay_start, 1), 0, 1)
+            return c.lr * warm * (1.0 - t * (1.0 - 0.1))
+        raise ValueError(c.schedule)
+    return fn
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros32, params),
+            "v": jax.tree.map(zeros32, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, c: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.grad_clip / (gnorm + 1e-9)) if c.grad_clip \
+        else jnp.ones(())
+    lr = schedule_fn(c)(step)
+    b1c = 1.0 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - c.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

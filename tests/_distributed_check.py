@@ -1,0 +1,47 @@
+"""Executed in a subprocess by test_distributed.py with 8 host devices."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import build_sharded_index, lookup_a2a, lookup_allgather
+
+assert jax.device_count() == 8
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+keys = np.sort(rng.choice(2 ** 22, size=80_000, replace=False)).astype(np.float64)
+si = build_sharded_index(keys, error=64, n_shards=8, mesh=mesh, axis="data")
+
+# present + absent queries, deliberately skewed to shard 0 to exercise overflow
+q_present = keys[rng.integers(0, keys.shape[0], size=192)]
+q_absent = q_present[:64] + 0.5
+queries = np.concatenate([q_present, q_absent])
+rng.shuffle(queries)
+queries = jnp.asarray(queries, jnp.float32)
+
+expect = np.searchsorted(keys.astype(np.float32), np.asarray(queries), side="left")
+present = keys.astype(np.float32)[np.minimum(expect, keys.shape[0] - 1)] == np.asarray(queries)
+expect = np.where(present, expect, -1)
+
+got_ag = np.asarray(lookup_allgather(si, queries, mesh, "data"))
+np.testing.assert_array_equal(got_ag, expect)
+print("allgather OK")
+
+got_a2a, ok = lookup_a2a(si, queries, mesh, "data", slack=8.0)
+got_a2a, ok = np.asarray(got_a2a), np.asarray(ok)
+assert ok.all(), f"a2a dropped {np.sum(~ok)} queries at slack=8"
+np.testing.assert_array_equal(got_a2a, expect)
+print("a2a OK")
+
+# skewed load with tiny slack: drops must be flagged, answered ones correct
+skew = jnp.asarray(np.sort(keys[:256]), jnp.float32)  # all owned by shard 0
+got_s, ok_s = lookup_a2a(si, skew, mesh, "data", slack=0.5)
+got_s, ok_s = np.asarray(got_s), np.asarray(ok_s)
+exp_s = np.searchsorted(keys.astype(np.float32), np.asarray(skew), side="left")
+assert np.all(got_s[ok_s] == exp_s[ok_s])
+print(f"a2a skew OK ({np.sum(~ok_s)} flagged drops)")
+print("ALL_OK")

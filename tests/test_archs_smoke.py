@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + finite values; plus
+prefill->decode cache-consistency for every decodable family."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced
+from repro.models import (decode_step, forward, init_caches, init_params,
+                          loss_fn, prefill)
+
+B, T = 2, 32
+
+
+def _inputs(cfg, key):
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    mem = None
+    if cfg.memory_len:
+        mem = jax.random.normal(jax.random.key(9), (B, cfg.memory_len,
+                                                    cfg.d_model),
+                                jnp.float32) * 0.02
+    return toks, mem
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    toks, mem = _inputs(cfg, jax.random.key(1))
+    loss, grads = jax.value_and_grad(loss_fn)(params, cfg, toks, mem)
+    assert np.isfinite(float(loss))
+    # untrained loss should be near log(vocab)
+    assert abs(float(loss) - math.log(cfg.vocab)) < 1.5
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat)
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    toks, mem = _inputs(cfg, jax.random.key(1))
+    logits, _ = forward(params, cfg, toks, memory=mem, mode="train")
+    assert logits.shape == (B, T, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Decoding token T given a prefill cache of [0..T) must produce the same
+    logits as a full forward over [0..T] -- exercises every cache type."""
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.key(0), dtype=jnp.float32)
+    toks, mem = _inputs(cfg, jax.random.key(1))
+    cache_len = T + 8
+
+    # full forward over all T tokens (teacher forcing reference)
+    ref_logits, _ = forward(params, cfg, toks, memory=mem, mode="train",
+                            remat=False)
+
+    caches = init_caches(cfg, B, cache_len, dtype=jnp.float32)
+    # prefill on the first T-1 tokens, then decode the T-th
+    pre_logits, caches = prefill(params, cfg, toks[:, : T - 1], caches,
+                                 memory=mem)
+    np.testing.assert_allclose(np.asarray(pre_logits),
+                               np.asarray(ref_logits[:, : T - 1]),
+                               rtol=2e-2, atol=2e-2)
+    pos = jnp.full((B,), T - 1, jnp.int32)
+    dec_logits, _ = decode_step(params, cfg, toks[:, T - 1:], pos, caches,
+                                memory=mem)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(ref_logits[:, T - 1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_exact_layer_counts():
+    expect = {"gemma3-12b": 48, "internlm2-1.8b": 24, "gemma2-27b": 46,
+              "minicpm-2b": 40, "arctic-480b": 35, "qwen3-moe-235b-a22b": 94,
+              "llama-3.2-vision-11b": 40, "recurrentgemma-9b": 38,
+              "xlstm-350m": 24, "whisper-medium": 48}
+    for arch, n in expect.items():
+        assert get_config(arch).n_layers == n, arch
+
+
+def test_param_counts_in_band():
+    """Sanity: exact (eval_shape) param counts land on the advertised scale.
+
+    whisper lands high (0.96B vs 769M): this repo uses gated-SwiGLU MLPs in
+    every block (DESIGN.md deviation); llama-vision lands at 9.8B because the
+    11B figure includes the stubbed vision encoder."""
+    from repro.models.model import param_count
+    bands = {"gemma3-12b": (9e9, 14e9), "internlm2-1.8b": (1.5e9, 2.3e9),
+             "gemma2-27b": (22e9, 30e9), "minicpm-2b": (2e9, 3.3e9),
+             "arctic-480b": (420e9, 520e9),
+             "qwen3-moe-235b-a22b": (200e9, 260e9),
+             "llama-3.2-vision-11b": (8e9, 12e9),
+             "recurrentgemma-9b": (7e9, 11e9),
+             "xlstm-350m": (2.5e8, 5e8), "whisper-medium": (5e8, 1.2e9)}
+    for arch, (lo, hi) in bands.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_routing_matches_dense_reference():
+    """Sort-based dispatch == explicit per-token expert mix at high capacity."""
+    from repro.models import blocks as BL
+    from repro.models.config import MoEConfig
+    cfg = reduced(get_config("qwen3-moe-235b-a22b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, moe=MoEConfig(4, 2, 64, capacity_factor=8.0))
+    p = BL.init_moe(cfg, jax.random.key(3), dtype=jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (2, 8, cfg.d_model), jnp.float32)
+    got = BL.apply_moe(p, x, cfg)
+
+    xt = x.reshape(-1, cfg.d_model)
+    probs = jax.nn.softmax(xt @ p["router"], axis=-1)
+    w, ids = jax.lax.top_k(probs, 2)
+    w = w / w.sum(-1, keepdims=True)
+    outs = []
+    for e in range(4):
+        h = jax.nn.silu(xt @ p["wg"][e]) * (xt @ p["wi"][e])
+        outs.append(h @ p["wo"][e])
+    dense = sum(jnp.where((ids == e).any(-1, keepdims=True),
+                          (w * (ids == e)).sum(-1, keepdims=True), 0.0) * outs[e]
+                for e in range(4))
+    np.testing.assert_allclose(np.asarray(got.reshape(-1, cfg.d_model)),
+                               np.asarray(dense), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,70 @@
+"""Sec. 6 cost model: monotonicity, pessimism, and the two choosers."""
+import numpy as np
+
+from repro.core import (CostParams, FITingTree, TPUCostParams,
+                        choose_error_for_latency, choose_error_for_space,
+                        latency_ns, latency_ns_tpu, learn_segments_fn, size_bytes)
+from repro.core.datasets import weblogs_like
+
+P = CostParams(c_ns=50.0, fanout=16, fill=0.5, buffer_size=16)
+CANDS = [16, 32, 64, 128, 256, 512, 1024, 4096, 16384]
+
+
+def _segments_fn():
+    keys = weblogs_like(100_000)
+    return keys, learn_segments_fn(keys, CANDS, sample=None)
+
+
+def test_latency_increases_with_error_at_fixed_segments():
+    assert latency_ns(1024, 1000, P) > latency_ns(16, 1000, P)
+
+
+def test_size_decreases_with_error():
+    keys, fn = _segments_fn()
+    sizes = [size_bytes(e, fn(e), P) for e in CANDS]
+    assert all(a >= b for a, b in zip(sizes, sizes[1:]))
+
+
+def test_size_model_is_pessimistic_but_close():
+    """Fig. 10b: predicted size upper-bounds the real index size, within ~10x."""
+    keys, fn = _segments_fn()
+    for e in (64, 256, 1024):
+        t = FITingTree(keys, error=e)
+        predicted = size_bytes(e, fn(e), P)
+        actual = t.index_size_bytes()
+        assert predicted >= actual * 0.5
+        assert predicted <= actual * 20
+
+
+def test_choosers_respect_constraints():
+    keys, fn = _segments_fn()
+    e_lat = choose_error_for_latency(900.0, fn, CANDS, P)
+    assert e_lat is not None
+    assert latency_ns(e_lat, fn(e_lat), P) <= 900.0
+    # smallest-size among feasible: any smaller-e candidate with ok latency is bigger
+    for e in CANDS:
+        if latency_ns(e, fn(e), P) <= 900.0:
+            assert size_bytes(e_lat, fn(e_lat), P) <= size_bytes(e, fn(e), P)
+
+    budget = 64 * 1024.0
+    e_sz = choose_error_for_space(budget, fn, CANDS, P)
+    assert e_sz is not None
+    assert size_bytes(e_sz, fn(e_sz), P) <= budget
+    for e in CANDS:
+        if size_bytes(e, fn(e), P) <= budget:
+            assert latency_ns(e_sz, fn(e_sz), P) <= latency_ns(e, fn(e), P)
+
+
+def test_infeasible_returns_none():
+    keys, fn = _segments_fn()
+    assert choose_error_for_latency(1.0, fn, CANDS, P) is None
+    assert choose_error_for_space(1.0, fn, CANDS, P) is None
+
+
+def test_tpu_model_window_term_scales_with_error():
+    tp = TPUCostParams()
+    small = latency_ns_tpu(64, 1000, tp)
+    large = latency_ns_tpu(65536, 1000, tp)
+    assert large > small
+    # the window DMA term should dominate for huge errors
+    assert large - small > 0.5 * (2 * 65536 * 8) / tp.hbm_gbps

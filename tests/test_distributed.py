@@ -1,0 +1,27 @@
+"""Multi-device (8 fake CPU devices) range-partitioned index, via subprocess
+so the forced device count never leaks into other tests."""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_subprocess(name):
+    script = pathlib.Path(__file__).parent / name
+    env = {"PYTHONPATH": str(pathlib.Path(__file__).parents[1] / "src"),
+           "PATH": "/usr/bin:/bin"}
+    res = subprocess.run([sys.executable, str(script)], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    assert "ALL_OK" in res.stdout
+
+
+@pytest.mark.slow
+def test_distributed_lookup_8dev():
+    _run_subprocess("_distributed_check.py")
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel_8dev():
+    _run_subprocess("_moe_ep_check.py")

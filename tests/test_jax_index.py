@@ -1,0 +1,89 @@
+"""Device-side index: batched lookup / bounds / range counts, both strategies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_device_index, lookup, predict_positions, range_count
+from repro.core.jax_index import bound
+
+
+def _keys(n=5000, seed=0, as_int=True):
+    rng = np.random.default_rng(seed)
+    # integer-valued keys < 2^23 so f32 interpolation is exact (see jax_index doc)
+    ks = np.sort(rng.choice(2 ** 23, size=n, replace=False)).astype(np.float64)
+    return ks
+
+
+@pytest.mark.parametrize("strategy", ["window", "bisect"])
+@pytest.mark.parametrize("error", [8, 64])
+def test_lookup_finds_all(strategy, error):
+    ks = _keys()
+    idx = build_device_index(ks, error)
+    q = jnp.asarray(ks[::7], jnp.float32)
+    ranks = np.asarray(lookup(idx, q, strategy))
+    assert np.all(ranks >= 0)
+    np.testing.assert_array_equal(ks[ranks], ks[::7])
+
+
+@pytest.mark.parametrize("strategy", ["window", "bisect"])
+def test_lookup_absent_returns_minus_one(strategy):
+    ks = _keys()
+    idx = build_device_index(ks, 32)
+    q = jnp.asarray(ks[::11] + 0.5, jnp.float32)
+    assert np.all(np.asarray(lookup(idx, q, strategy)) == -1)
+
+
+def test_predictions_within_error():
+    ks = _keys(20_000, seed=3)
+    e = 16
+    idx = build_device_index(ks, e)
+    pred = np.asarray(predict_positions(idx, jnp.asarray(ks, jnp.float32)))
+    true = np.arange(ks.shape[0])
+    # duplicates of boundary keys can be assigned the neighbour segment; allow +-e
+    assert np.max(np.abs(pred - true)) <= e + 1
+
+
+def test_bound_matches_numpy_searchsorted():
+    ks = _keys(8000, seed=5)
+    idx = build_device_index(ks, 32)
+    rng = np.random.default_rng(7)
+    q = np.sort(rng.uniform(ks[0], ks[-1], size=300)).astype(np.float32)
+    got_l = np.asarray(bound(idx, jnp.asarray(q), "left"))
+    got_r = np.asarray(bound(idx, jnp.asarray(q), "right"))
+    ks32 = ks.astype(np.float32)
+    np.testing.assert_array_equal(got_l, np.searchsorted(ks32, q, side="left"))
+    np.testing.assert_array_equal(got_r, np.searchsorted(ks32, q, side="right"))
+
+
+def test_range_count():
+    ks = _keys(8000, seed=9)
+    idx = build_device_index(ks, 64)
+    lo = jnp.asarray(ks[100:110], jnp.float32)
+    hi = jnp.asarray(ks[600:610], jnp.float32)
+    got = np.asarray(range_count(idx, lo, hi))
+    np.testing.assert_array_equal(got, 501)
+
+
+def test_lookup_jits_and_caches():
+    ks = _keys()
+    idx = build_device_index(ks, 32)
+    f = jax.jit(lambda q: lookup(idx, q, "window"))
+    q = jnp.asarray(ks[:128], jnp.float32)
+    r1 = f(q)
+    r2 = f(q + 0)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+@given(seed=st.integers(0, 30), error=st.sampled_from([4, 16, 63, 128]))
+@settings(max_examples=20, deadline=None)
+def test_property_device_matches_host(seed, error):
+    rng = np.random.default_rng(seed)
+    ks = np.sort(rng.choice(2 ** 20, size=1000, replace=False)).astype(np.float64)
+    idx = build_device_index(ks, error)
+    q = ks[rng.integers(0, 1000, size=64)]
+    ranks = np.asarray(lookup(idx, jnp.asarray(q, jnp.float32), "window"))
+    np.testing.assert_array_equal(ks[ranks], q)
+    ranks_b = np.asarray(lookup(idx, jnp.asarray(q, jnp.float32), "bisect"))
+    np.testing.assert_array_equal(ranks, ranks_b)

@@ -1,0 +1,143 @@
+"""Launch-layer units: sharding rules, input specs, HLO analysis parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+from repro.launch.hlo_analysis import (analyze_collectives, shape_bytes,
+                                       split_computations)
+from repro.launch.sharding import batch_spec, cache_spec, param_spec
+from repro.launch.specs import input_specs
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class Leaf:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+class K:
+    def __init__(self, key):
+        self.key = key
+
+
+def test_param_spec_rules():
+    # embed (V, D): vocab->model, d->data
+    assert param_spec((K("embed"),), Leaf((262144, 3840)), MESH) == \
+        P("model", "data")
+    # stacked attn wq: leading repeat dim unsharded
+    path = (K("stacks"), K("s0"), K("b0"), K("attn"), K("wq"))
+    assert param_spec(path, Leaf((8, 3840, 4096)), MESH) == \
+        P(None, "data", "model")
+    # moe experts: EP over model
+    path = (K("stacks"), K("s0"), K("b0"), K("moe"), K("wi"))
+    assert param_spec(path, Leaf((94, 128, 4096, 1536)), MESH) == \
+        P(None, "model", "data", None)
+    # non-divisible dims fall back to None: 36 heads % 16 != 0
+    path = (K("stacks"), K("s0"), K("b0"), K("attn"), K("wq"))
+    spec = param_spec(path, Leaf((40, 2304, 36 * 64)), MESH)
+    assert spec == P(None, "data", ("model",)) or spec == P(None, "data", "model")
+
+
+def test_param_spec_zero3():
+    path = (K("stacks"), K("s0"), K("b0"), K("mlp"), K("wi"))
+    spec = param_spec(path, Leaf((24, 2048, 8192)), MESH, policy="zero3")
+    assert spec == P(None, ("data", "model"), None)
+
+
+def test_batch_spec():
+    assert batch_spec(MESH3, 256, 2) == P(("pod", "data"), None)
+    assert batch_spec(MESH, 256, 2) == P(("data",), None)
+    assert batch_spec(MESH, 1, 2) == P(None, None)      # long_500k: b=1
+    assert batch_spec(MESH, 256, 2, policy="zero3") == \
+        P(("data", "model"), None)
+
+
+def test_cache_spec():
+    # (R, B, L, Kv, hd): batch over dp, kv-heads over model when divisible
+    s = cache_spec(MESH, Leaf((8, 128, 32768, 16, 128)), 128)
+    assert s == P(None, ("data",), None, "model", None)
+    # kv=1 (MQA): falls back to sequence sharding over model
+    s = cache_spec(MESH, Leaf((8, 128, 32768, 1, 256)), 128)
+    assert s == P(None, ("data",), "model", None, None)
+    # b=1 long context: no batch sharding, seq over model
+    s = cache_spec(MESH, Leaf((8, 1, 524288, 8, 256)), 1)
+    assert s[1] is None and "model" in (s[2], s[3])
+
+
+def test_input_specs_all_cells():
+    """Every runnable (arch x shape) produces well-formed SDS trees."""
+    n = 0
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape, spec in SHAPES.items():
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            kind, shapes = input_specs(arch, shape)
+            n += 1
+            if kind == "train":
+                assert shapes["batch"]["tokens"].shape == \
+                    (spec.global_batch, spec.seq_len)
+            elif kind == "prefill":
+                assert shapes["tokens"].shape == (spec.global_batch,
+                                                  spec.seq_len)
+                assert len(jax.tree.leaves(shapes["caches"])) > 0
+            else:
+                assert shapes["tokens"].shape == (spec.global_batch, 1)
+                assert shapes["pos"].shape == (spec.global_batch,)
+    assert n == 34          # 40 cells - 6 documented skips
+
+
+def test_long500k_skips_documented():
+    skipped = [a for a in ARCHS
+               if not shape_applicable(get_config(a), "long_500k")[0]]
+    assert sorted(skipped) == sorted([
+        "internlm2-1.8b", "minicpm-2b", "arctic-480b", "qwen3-moe-235b-a22b",
+        "llama-3.2-vision-11b", "whisper-medium"])
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,1024]") == 16 * 1024 * 2
+    assert shape_bytes("(f32[8,8], s32[4])") == 8 * 8 * 4 + 4 * 4
+    assert shape_bytes("pred[100]") == 100
+
+
+def test_hlo_analysis_synthetic():
+    hlo = """
+cond.1 (arg: (s32[], f32[4])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%iter, %c), direction=LT
+}
+
+body.1 (arg: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %ag = f32[64,128] all-gather(%w), dimensions={0}
+  %ar = f32[32,32] all-reduce(%x), to_apply=%add
+}
+
+ENTRY main (p: f32[4]) -> f32[4] {
+  %w = (s32[], f32[4]) while(%t), condition=%cond.1, body=%body.1
+  %ar2 = bf16[8] all-reduce(%y), to_apply=%add
+}
+"""
+    res = analyze_collectives(hlo)
+    assert res["all-gather_bytes"] == 12 * 64 * 128 * 4
+    assert res["all-reduce_bytes"] == 12 * 32 * 32 * 4 + 8 * 2
+    assert res["total_collective_bytes_raw"] == \
+        64 * 128 * 4 + 32 * 32 * 4 + 8 * 2
+    assert res["wire_bytes"] == 2 * res["all-reduce_bytes"] + \
+        res["all-gather_bytes"]
+
+
+def test_hlo_promoted_allreduce_halved():
+    hlo = """
+ENTRY main (p: f32[4]) -> f32[4] {
+  %ar = f32[16] all-reduce(%y), to_apply=%add.clone_promoted
+}
+"""
+    res = analyze_collectives(hlo)
+    assert res["all-reduce_bytes"] == 16 * 4 // 2

@@ -1,0 +1,116 @@
+"""Segmentation invariants: Alg. 1 / Alg. 2 / Theorem 3.1 / Sec. 3.4 bound."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (max_segments_bound, optimal_segmentation, shrinking_cone,
+                        shrinking_cone_py, verify_segments)
+from repro.core.datasets import iot_like, maps_like, step_data, uniform_keys
+
+
+def _sorted_keys(draw_list):
+    xs = np.sort(np.asarray(draw_list, dtype=np.float64))
+    return xs
+
+
+sorted_arrays = st.lists(
+    st.floats(min_value=-1e9, max_value=1e9, allow_nan=False, allow_infinity=False),
+    min_size=2, max_size=400,
+).map(_sorted_keys)
+
+
+@given(xs=sorted_arrays, error=st.integers(min_value=1, max_value=64))
+@settings(max_examples=200, deadline=None)
+def test_error_bound_invariant(xs, error):
+    """Eq. 1: every key's interpolated position is within `error` of its rank."""
+    segs = shrinking_cone(xs, error)
+    assert verify_segments(xs, segs) <= error + 1e-6
+
+
+@given(xs=sorted_arrays, error=st.integers(min_value=1, max_value=64))
+@settings(max_examples=200, deadline=None)
+def test_clamped_mode_bound_and_no_worse(xs, error):
+    paper = shrinking_cone(xs, error, mode="paper")
+    clamp = shrinking_cone(xs, error, mode="clamped")
+    assert verify_segments(xs, clamp) <= error + 1e-6
+    assert clamp.n_segments <= paper.n_segments
+
+
+@given(xs=sorted_arrays, error=st.integers(min_value=1, max_value=64))
+@settings(max_examples=150, deadline=None)
+def test_fast_matches_reference(xs, error):
+    """The chunked numpy scan reproduces the line-by-line Alg. 2 exactly."""
+    fast = shrinking_cone(xs, error)
+    ref = shrinking_cone_py(xs, error)
+    np.testing.assert_array_equal(fast.base, ref.base)
+    np.testing.assert_allclose(fast.slope, ref.slope, rtol=1e-12)
+
+
+@given(xs=sorted_arrays, error=st.integers(min_value=1, max_value=32))
+@settings(max_examples=60, deadline=None)
+def test_optimal_not_worse_than_greedy(xs, error):
+    greedy = shrinking_cone(xs, error)
+    opt = optimal_segmentation(xs, error)
+    assert opt <= greedy.n_segments
+    assert opt >= 1
+
+
+@given(xs=sorted_arrays, error=st.integers(min_value=1, max_value=32))
+@settings(max_examples=60, deadline=None)
+def test_optimal_segments_are_valid(xs, error):
+    segs = optimal_segmentation(xs, error, return_segments=True)
+    assert verify_segments(xs, segs) <= error + 1e-6
+
+
+def test_theorem_3_1_min_segment_span():
+    """A maximal segment covers >= error+1 locations (distinct keys, no dups)."""
+    rng = np.random.default_rng(0)
+    xs = np.sort(rng.uniform(0, 1e6, size=20_000))
+    for error in (4, 16, 64):
+        segs = shrinking_cone(xs, error)
+        # all segments except possibly the last are maximal
+        assert np.all(segs.count[:-1] >= error + 1)
+
+
+def test_sec_3_4_segment_count_guarantee():
+    rng = np.random.default_rng(1)
+    xs = np.sort(rng.uniform(0, 1e6, size=50_000))
+    for error in (8, 32, 128):
+        segs = shrinking_cone(xs, error)
+        assert segs.n_segments <= max_segments_bound(
+            len(np.unique(xs)), xs.shape[0], error)
+
+
+def test_worst_case_step_data():
+    """Sec. 7.2 / Fig. 9: error < step -> ~1 segment per step; error >= step -> 1."""
+    step = 100
+    xs = step_data(n=50_000, step=step, jump=1e5, within=1.0)
+    small = shrinking_cone(xs, error=step // 2)
+    big = shrinking_cone(xs, error=2 * step)
+    n_steps = 50_000 // step
+    assert small.n_segments >= n_steps * 0.9
+    assert big.n_segments <= max(3, n_steps // 50)
+
+
+def test_linear_data_single_segment():
+    xs = np.arange(10_000, dtype=np.float64) * 3.5
+    segs = shrinking_cone(xs, error=2)
+    assert segs.n_segments == 1
+    assert verify_segments(xs, segs) <= 0.5
+
+
+def test_duplicates_handled():
+    xs = np.sort(np.repeat(np.arange(100, dtype=np.float64), 7))
+    segs = shrinking_cone(xs, error=8)
+    assert verify_segments(xs, segs) <= 8
+    ref = shrinking_cone_py(xs, 8)
+    np.testing.assert_array_equal(segs.base, ref.base)
+
+
+def test_greedy_close_to_optimal_on_real_shapes():
+    """Table 1 reproduction shape: ratio in ~[1.0, 2.0] on real-like data."""
+    for make, err in ((iot_like, 10), (maps_like, 10), (uniform_keys, 10)):
+        xs = make(20_000)
+        greedy = shrinking_cone(xs, err).n_segments
+        opt = optimal_segmentation(xs, err)
+        assert opt <= greedy <= max(2.5 * opt, opt + 2), (make.__name__, greedy, opt)

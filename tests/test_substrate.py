@@ -1,0 +1,183 @@
+"""Substrate tests: data pipeline (learned-index addressing), checkpointing
+(atomicity, crc, elastic restore), int8 error-feedback compression, and the
+fault-tolerance contract (die -> resume == uninterrupted run)."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.data.pipeline import (Corpus, DataPipeline, DocIndex,
+                                 PipelineConfig, synthetic_corpus)
+from repro.train.compress import compress_decompress, init_residual
+
+SRC = str(pathlib.Path(__file__).parents[1] / "src")
+
+
+# ------------------------------------------------------------------ pipeline
+def test_doc_index_matches_searchsorted():
+    corpus = synthetic_corpus(n_tokens=300_000, seed=3)
+    di = DocIndex(corpus.boundaries, error=32)
+    pos = np.random.default_rng(0).integers(0, corpus.n_tokens, size=5000)
+    docs, offs = di.doc_of(pos)
+    want = np.searchsorted(corpus.boundaries, pos, side="right") - 1
+    np.testing.assert_array_equal(docs, want)
+    np.testing.assert_array_equal(offs, pos - corpus.boundaries[want])
+    assert di.index_size_bytes() < corpus.n_docs * 8
+
+
+def test_pipeline_deterministic_and_resumable():
+    corpus = synthetic_corpus(n_tokens=500_000, seed=1)
+    mk = lambda: DataPipeline(corpus, PipelineConfig(seq_len=64, batch_size=4,
+                                                     seed=7))
+    p1, p2 = mk(), mk()
+    for s in (0, 5, 11):
+        np.testing.assert_array_equal(p1.batch_at(s)["tokens"],
+                                      p2.batch_at(s)["tokens"])
+    # different steps give different batches
+    assert not np.array_equal(p1.batch_at(0)["tokens"],
+                              p1.batch_at(1)["tokens"])
+
+
+def test_pipeline_host_sharding_disjoint():
+    corpus = synthetic_corpus(n_tokens=500_000, seed=1)
+    a = DataPipeline(corpus, PipelineConfig(seq_len=64, batch_size=4,
+                                            n_hosts=2, host_id=0, seed=7))
+    b = DataPipeline(corpus, PipelineConfig(seq_len=64, batch_size=4,
+                                            n_hosts=2, host_id=1, seed=7))
+    sa = a._sample_ids(3)
+    sb = b._sample_ids(3)
+    assert set(sa).isdisjoint(set(sb))
+
+
+def test_pipeline_prefetch_thread():
+    corpus = synthetic_corpus(n_tokens=300_000, seed=2)
+    p = DataPipeline(corpus, PipelineConfig(seq_len=64, batch_size=2))
+    p.start(from_step=4)
+    it = iter(p)
+    s, batch = next(it)
+    assert s == 4
+    np.testing.assert_array_equal(batch["tokens"], p.batch_at(4)["tokens"])
+    p.stop()
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(10, dtype=np.float32),
+            "b": {"c": np.ones((3, 4), np.int32), "d": np.float32(2.5)}}
+    ckpt.save(tmp_path, 7, tree, extra={"note": "x"})
+    assert ckpt.latest_step(tmp_path) == 7
+    got, extra = ckpt.restore(tmp_path, 7, tree)
+    assert extra["note"] == "x"
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), tree, got)
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    tree = {"a": np.arange(100, dtype=np.float32)}
+    d = ckpt.save(tmp_path, 1, tree)
+    part = next(d.glob("part_*.npz"))
+    raw = bytearray(part.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    part.write_bytes(bytes(raw))
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(tmp_path, 1, tree)
+
+
+def test_checkpoint_incomplete_ignored(tmp_path):
+    tree = {"a": np.arange(4, dtype=np.float32)}
+    ckpt.save(tmp_path, 3, tree)
+    bad = tmp_path / "step_00000009"
+    bad.mkdir()                       # no DONE marker -> must be ignored
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_async_saver_gc(tmp_path):
+    s = ckpt.AsyncSaver(tmp_path, keep_last=2)
+    tree = {"a": np.zeros(4, np.float32)}
+    for step in (1, 2, 3, 4):
+        s.save(step, tree)
+    s.wait()
+    s._gc()
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+# --------------------------------------------------------------- compression
+def test_compression_error_feedback_unbiased():
+    rng = np.random.default_rng(0)
+    g_true = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    res = init_residual(g_true)
+    acc = jnp.zeros((64, 64))
+    n = 50
+    for _ in range(n):
+        dq, res = compress_decompress(g_true, res)
+        acc = acc + dq["w"]
+    # sum of dequantized grads ~= sum of true grads (error feedback closes gap)
+    rel = float(jnp.abs(acc - n * g_true["w"]).max() /
+                jnp.abs(g_true["w"]).max())
+    assert rel < 0.05, rel
+
+
+def test_compression_quantizes_to_int8_grid():
+    g = {"w": jnp.asarray([[0.5, -1.0, 3.3]], jnp.float32)}
+    dq, res = compress_decompress(g, init_residual(g))
+    scale = 3.3 / 127.0
+    q = np.asarray(dq["w"]) / scale
+    np.testing.assert_allclose(q, np.round(q), atol=1e-4)
+
+
+# ------------------------------------------------------------ fault tolerance
+@pytest.mark.slow
+def test_die_resume_matches_uninterrupted(tmp_path):
+    """Kill at step 12, resume -> final metrics equal the uninterrupted run."""
+    common = [sys.executable, "-m", "repro.launch.train", "--smoke",
+              "--steps", "20", "--batch", "2", "--seq", "64",
+              "--ckpt-every", "10", "--log-every", "1"]
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"}
+
+    r_full = subprocess.run(common + ["--ckpt-dir", str(tmp_path / "full")],
+                            capture_output=True, text=True, timeout=900,
+                            env=env)
+    assert r_full.returncode == 0, r_full.stderr[-2000:]
+
+    r_die = subprocess.run(common + ["--ckpt-dir", str(tmp_path / "fault"),
+                                     "--die-at-step", "12"],
+                           capture_output=True, text=True, timeout=900,
+                           env=env)
+    assert r_die.returncode == 42  # simulated hard failure
+    r_res = subprocess.run(common + ["--ckpt-dir", str(tmp_path / "fault"),
+                                     "--resume"],
+                           capture_output=True, text=True, timeout=900,
+                           env=env)
+    assert r_res.returncode == 0, r_res.stderr[-2000:]
+    assert "resumed from step 10" in r_res.stdout
+
+    def last_losses(d):
+        lines = (d / "metrics.jsonl").read_text().splitlines()
+        return {json.loads(l)["step"]: json.loads(l)["loss"] for l in lines}
+
+    full = last_losses(tmp_path / "full")
+    fault = last_losses(tmp_path / "fault")
+    # post-resume steps must match the uninterrupted run exactly
+    for s in range(10, 20):
+        assert abs(full[s] - fault[s]) < 1e-5, (s, full[s], fault[s])
+
+
+@pytest.mark.slow
+def test_train_with_compression_converges(tmp_path):
+    """--compress (int8 EF grads) trains and checkpoints round-trip."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--smoke", "--steps",
+         "12", "--batch", "2", "--seq", "64", "--compress", "--log-every",
+         "1", "--ckpt-dir", str(tmp_path / "c"), "--ckpt-every", "6"],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    lines = (tmp_path / "c" / "metrics.jsonl").read_text().splitlines()
+    losses = [json.loads(l)["loss"] for l in lines]
+    assert losses[-1] < losses[0]

@@ -1,0 +1,129 @@
+"""FITingTree behaviour: lookups (Alg. 3), inserts (Alg. 4), ranges, router."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FITingTree, PackedRouter
+from repro.core.datasets import iot_like, step_data
+
+
+def _mk(n=5000, error=32, buffer_size=0, seed=0, payload=False):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.uniform(0, 1e7, size=n))
+    pl = np.arange(n) * 10 if payload else None
+    return keys, FITingTree(keys, error=error, buffer_size=buffer_size, payload=pl)
+
+
+def test_lookup_finds_every_key():
+    keys, t = _mk()
+    for k in keys[:: 37]:
+        assert t.lookup(k) is not None
+    # absent keys
+    rng = np.random.default_rng(1)
+    absent = rng.uniform(1.1e7, 2e7, size=50)
+    for k in absent:
+        assert t.lookup(k) is None
+
+
+def test_lookup_batch_matches_scalar():
+    keys, t = _mk(n=20_000, error=64)
+    q = keys[:: 11]
+    ranks = t.lookup_batch(q)
+    assert np.all(ranks >= 0)
+    np.testing.assert_array_equal(keys[ranks], q)
+    absent = q + 0.5
+    assert np.all(t.lookup_batch(absent) == -1)
+
+
+def test_error_invariant_after_build():
+    keys, t = _mk(n=30_000, error=16)
+    assert t.max_abs_error() <= t.err_seg + 1e-6
+
+
+@given(seed=st.integers(0, 50), error=st.integers(8, 128))
+@settings(max_examples=25, deadline=None)
+def test_property_lookup_roundtrip(seed, error):
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.uniform(0, 1e6, size=2000))
+    t = FITingTree(keys, error=error)
+    q = keys[rng.integers(0, 2000, size=100)]
+    ranks = t.lookup_batch(q)
+    assert np.all(ranks >= 0)
+    np.testing.assert_array_equal(keys[ranks], q)
+
+
+def test_insert_then_lookup():
+    keys, t = _mk(n=10_000, error=64, buffer_size=16)
+    rng = np.random.default_rng(2)
+    new = rng.uniform(0, 1e7, size=2000)
+    for k in new:
+        t.insert(k)
+    for k in new[:: 17]:
+        assert t.lookup(k) is not None, k
+    for k in keys[:: 97]:
+        assert t.lookup(k) is not None, k
+    # error bound still holds after merges (Sec. 5)
+    assert t.max_abs_error() <= t.err_seg + 1e-6
+    assert t.n_keys == 12_000
+
+
+def test_insert_splits_segments():
+    """Buffer overflow must trigger merge + re-segmentation (Alg. 4 lines 5-9)."""
+    keys = np.arange(1000, dtype=np.float64)  # linear -> 1 segment
+    t = FITingTree(keys, error=64, buffer_size=8)
+    assert t.n_segments == 1
+    # hammer one region with a highly non-linear burst
+    for i in range(64):
+        t.insert(500.0 + i * 1e-4)
+    assert t.max_abs_error() <= t.err_seg + 1e-6
+    assert t.n_keys == 1064
+
+
+def test_range_query():
+    keys, t = _mk(n=10_000, error=32, buffer_size=8)
+    lo, hi = keys[1000], keys[1500]
+    got = t.range_query(lo, hi)
+    expect = keys[(keys >= lo) & (keys <= hi)]
+    np.testing.assert_allclose(got, expect)
+    # with buffered inserts inside the range
+    mids = np.linspace(lo, hi, 5)
+    for m in mids:
+        t.insert(float(m))
+    got2 = t.range_query(lo, hi)
+    assert got2.shape[0] == expect.shape[0] + 5
+
+
+def test_non_clustered_payload():
+    keys, t = _mk(payload=True)
+    res = t.lookup(keys[123])
+    assert res is not None and res[2] == 1230
+
+
+def test_router_equivalent_to_searchsorted():
+    keys, t = _mk(n=50_000, error=16)
+    q = np.sort(np.random.default_rng(3).uniform(0, 1e7, size=500))
+    via_router = t.router.descend(q)
+    direct = np.clip(np.searchsorted(t.start_keys, q, side="right") - 1, 0,
+                     t.n_segments - 1)
+    np.testing.assert_array_equal(via_router, direct)
+
+
+def test_router_height_and_size():
+    r = PackedRouter(np.arange(16 ** 3, dtype=np.float64), fanout=16)
+    assert r.height == 3
+    assert r.size_bytes() == (16 ** 3 + 16 ** 2 + 16) * 16
+
+
+def test_index_size_orders_of_magnitude_smaller():
+    """The paper's headline: index size << one entry per key (Sec. 7.1.2)."""
+    keys = iot_like(200_000)
+    t = FITingTree(keys, error=100)
+    dense_bytes = keys.shape[0] * 16  # key + pointer per entry
+    assert t.index_size_bytes() < dense_bytes / 100
+
+
+def test_step_data_segments():
+    keys = step_data(n=20_000, step=100)
+    t_small = FITingTree(keys, error=50)
+    t_big = FITingTree(keys, error=200)
+    assert t_big.n_segments < t_small.n_segments / 20
