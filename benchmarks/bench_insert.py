@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core import FITingTree
 from repro.core.datasets import iot_like, weblogs_like
+from repro.index import SnapshotPublisher
 
 from .baselines import FixedPagedIndex
 from .common import emit, write_csv
@@ -18,6 +19,7 @@ ERRORS = [64, 256, 1024, 4096]
 
 def run():
     rows = []
+    publish_rows = []
     rng = np.random.default_rng(1)
     for name, make in [("weblogs", weblogs_like), ("iot", iot_like)]:
         keys = make(N)
@@ -31,6 +33,12 @@ def run():
                 tree.insert(k)
             dt = time.perf_counter() - t0
             rows.append((name, "fiting", e, N_INS / dt))
+            # epoch publish cost: dirty-segment flush + snapshot assembly
+            pub = SnapshotPublisher(tree)
+            t0 = time.perf_counter()
+            snap = pub.publish()
+            publish_rows.append((name, e, snap.n_refit,
+                                 (time.perf_counter() - t0) * 1e3))
             fx = FixedPagedIndex(keys, page_size=e, buffer_size=e // 2)
             t0 = time.perf_counter()
             for k in new:
@@ -42,6 +50,8 @@ def run():
                   and r[2] == 1024))
     write_csv("fig7_insert", ["dataset", "method", "error", "inserts_per_s"],
               rows)
+    write_csv("fig7_publish", ["dataset", "error", "segments_refit",
+                               "publish_ms"], publish_rows)
     return rows
 
 

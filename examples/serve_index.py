@@ -1,10 +1,15 @@
-"""Serving the paper's index: batched point lookups through the Pallas kernel
-(interpret mode on CPU) and the XLA window/bisect paths, plus the distributed
-range-partitioned variant (run under 8 fake devices to see the collectives:
+"""Serving the paper's index through the unified core (repro.index):
+
+  * one `SegmentTable`, every engine backend (numpy / xla-window / xla-bisect
+    / pallas) checked against the oracle and timed;
+  * the epoch write path: buffered inserts -> publish() -> atomic snapshot
+    swap, after which every backend serves the new keys;
+  * optionally the distributed range-partitioned variant (run under 8 fake
+    devices to see the collectives):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/serve_index.py --distributed
-)"""
+"""
 import argparse
 import time
 
@@ -12,9 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_device_index, lookup
-from repro.kernels.ops import fitting_lookup
+from repro.index import SegmentTable, available_backends, make_engine
 from repro.kernels.ref import lookup_ref
+from repro.serve import IndexService
 
 
 def main():
@@ -22,6 +27,7 @@ def main():
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--error", type=int, default=64)
+    ap.add_argument("--inserts", type=int, default=2000)
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
 
@@ -29,23 +35,37 @@ def main():
     keys = np.sort(rng.choice(2 ** 23, size=args.n, replace=False)).astype(
         np.float64)
     q = jnp.asarray(keys[rng.integers(0, args.n, args.queries)], jnp.float32)
-    idx = build_device_index(keys, args.error)
+    table = SegmentTable.from_keys(keys, args.error, assume_sorted=True)
 
-    got = np.asarray(fitting_lookup(idx, q[:256], interpret=True))
-    want = np.asarray(lookup_ref(idx.keys, q[:256]))
-    assert np.array_equal(got, want)
-    print(f"Pallas kernel == oracle on {got.shape[0]} queries "
-          f"(interpret mode)")
-
-    for name, strat in (("window", "window"), ("bisect", "bisect")):
-        f = jax.jit(lambda qq, s=strat: lookup(idx, qq, s))
-        f(q).block_until_ready()
+    want = np.asarray(lookup_ref(jnp.asarray(keys, jnp.float32), q[:256]))
+    for backend in available_backends():
+        eng = make_engine(table, backend)
+        got = np.asarray(eng.lookup(q[:256]))
+        assert np.array_equal(got, want), backend
+        eng.lookup(q)                       # warm the compile cache
         t0 = time.perf_counter()
         for _ in range(5):
-            f(q).block_until_ready()
+            np.asarray(eng.lookup(q))
         dt = (time.perf_counter() - t0) / 5
-        print(f"  {name:7s}: {dt/args.queries*1e9:8.0f} ns/query "
-              f"({args.queries} queries/batch)")
+        print(f"  {backend:11s}: {dt/args.queries*1e9:8.0f} ns/query "
+              f"({args.queries} queries/batch, == oracle)")
+
+    # --- write path: insert -> publish -> every backend serves the new epoch
+    svc = IndexService(keys, error=args.error, buffer_size=args.error // 2,
+                       backend="xla-bisect")
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=2 * args.inserts, replace=False).astype(
+            np.float64), keys)[: args.inserts]
+    for k in fresh:
+        svc.insert(float(k))
+    assert np.all(svc.lookup(fresh[:64]) == -1), "unpublished inserts invisible"
+    t0 = time.perf_counter()
+    snap = svc.publish()
+    dt = time.perf_counter() - t0
+    assert np.all(svc.lookup(fresh[:64]) >= 0)
+    print(f"  publish: epoch {snap.epoch}, {args.inserts} inserts, "
+          f"{snap.n_refit} segments re-fit, {dt*1e3:.1f} ms; "
+          f"serving swapped atomically")
 
     if args.distributed:
         from repro.core.distributed import build_sharded_index, lookup_allgather

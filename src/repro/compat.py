@@ -1,0 +1,20 @@
+"""Version-compatibility shims for jax public-API drift.
+
+``shard_map`` became ``jax.shard_map`` (with ``check_vma``) in newer releases;
+older jaxlibs only have ``jax.experimental.shard_map.shard_map`` (with the
+same knob named ``check_rep``).  Import ``shard_map`` from here and always use
+the new-style keyword.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map                      # jax >= 0.4.38
+except AttributeError:                             # jax <= 0.4.37
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        kwargs.setdefault("check_rep", check_vma)
+        return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, **kwargs)

@@ -1,19 +1,31 @@
-"""FITing-Tree core: the paper's contribution (segmentation, index, cost model)."""
+"""FITing-Tree core: the paper's contribution (segmentation, index, cost model).
+
+The host-side modules (segmentation, tree, cost model, datasets) are pure
+numpy and imported eagerly; the device-side names from ``jax_index`` resolve
+lazily (PEP 562) so host-only code never pulls in jax.
+"""
 from .segmentation import (Segments, max_segments_bound, optimal_segmentation,
                            shrinking_cone, shrinking_cone_py, verify_segments)
 from .tree import FITingTree, PackedRouter
 from .cost_model import (CostParams, TPUCostParams, choose_error_for_latency,
                          choose_error_for_space, latency_ns, latency_ns_tpu,
                          learn_segments_fn, size_bytes)
-from .jax_index import (DeviceIndex, build_device_index, lookup,
-                        predict_positions, range_count, rescale_keys)
 from . import datasets
+
+_JAX_INDEX_NAMES = {"DeviceIndex", "build_device_index", "lookup",
+                    "predict_positions", "range_count", "rescale_keys"}
 
 __all__ = [
     "Segments", "shrinking_cone", "shrinking_cone_py", "optimal_segmentation",
     "verify_segments", "max_segments_bound", "FITingTree", "PackedRouter",
     "CostParams", "TPUCostParams", "latency_ns", "latency_ns_tpu", "size_bytes",
     "learn_segments_fn", "choose_error_for_latency", "choose_error_for_space",
-    "DeviceIndex", "build_device_index", "lookup", "predict_positions",
-    "range_count", "rescale_keys", "datasets",
+    "datasets", *sorted(_JAX_INDEX_NAMES),
 ]
+
+
+def __getattr__(name):
+    if name in _JAX_INDEX_NAMES:
+        from . import jax_index
+        return getattr(jax_index, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -26,8 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
+from repro.index.table import build_shard_tables
+
 from .jax_index import DeviceIndex, lookup
-from .segmentation import shrinking_cone
 
 
 class ShardedIndex(NamedTuple):
@@ -45,24 +47,22 @@ def build_sharded_index(keys: np.ndarray, error: int, n_shards: int,
     keys = np.asarray(keys, np.float64)
     n = keys.shape[0]
     m = n // n_shards
-    keys = keys[: m * n_shards]            # equal shards; tail handled by caller
-    shards = keys.reshape(n_shards, m)
-    seg_list = [shrinking_cone(s, error) for s in shards]
-    s_max = max(sg.n_segments for sg in seg_list)
+    # equal shards; tail handled by caller.  One canonical SegmentTable per
+    # shard (local ranks) -- the same construction every other layer uses.
+    tables = build_shard_tables(keys, error, n_shards)
+    shards = keys[: m * n_shards].reshape(n_shards, m)
+    s_max = max(t.n_segments for t in tables)
 
     def pad(a, fill, dtype):
         out = np.full((n_shards, s_max), fill, dtype)
-        for d, sg in enumerate(seg_list):
-            out[d, : sg.n_segments] = a(sg)
+        for d, t in enumerate(tables):
+            out[d, : t.n_segments] = a(t)
         return out
 
-    seg_start = pad(lambda s: s.start_key, np.inf, np.float64)
-    slope = pad(lambda s: s.slope, 0.0, np.float64)
-    base = pad(lambda s: s.base, m, np.int64)
-    seg_end = np.full((n_shards, s_max), m, np.int64)
-    for d, sg in enumerate(seg_list):
-        e = np.concatenate([sg.base[1:], [m]])
-        seg_end[d, : sg.n_segments] = e
+    seg_start = pad(lambda t: t.start_key, np.inf, np.float64)
+    slope = pad(lambda t: t.slope, 0.0, np.float64)
+    base = pad(lambda t: t.base, m, np.int64)
+    seg_end = pad(lambda t: t.seg_end, m, np.int64)
 
     arrays = dict(
         seg_start=jnp.asarray(seg_start, jnp.float32),
@@ -93,7 +93,7 @@ def lookup_allgather(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
     d = mesh.shape[axis]
     m = si.keys.shape[1]
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(_shard_map, mesh=mesh,
              in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
                        P(axis, None), P(), P(axis)),
              out_specs=P(axis))
@@ -137,7 +137,7 @@ def lookup_a2a(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
     q_per = queries.shape[0] // d
     cap = int(np.ceil(q_per / d * slack))
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(_shard_map, mesh=mesh,
              in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
                        P(axis, None), P(), P(axis)),
              out_specs=(P(axis), P(axis)))

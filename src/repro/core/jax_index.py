@@ -1,14 +1,14 @@
-"""Device-side (JAX) FITing-Tree: immutable arrays + batched lookups.
+"""Device-side (JAX) FITing-Tree: thin compatibility wrapper.
 
-This is the TPU-native form of the index (DESIGN.md Sec. 2): the segment table
-is a handful of dense arrays small enough for VMEM; the sorted key column stays
-in HBM; a batched lookup is
+The canonical implementation now lives in ``repro.index``: the segment
+geometry is a ``SegmentTable`` (repro.index.table) and the batched bounded
+searches -- the ``window`` / ``bisect`` strategies described below -- exist
+once, in ``repro.index.engine`` (``xla_lookup``).  This module keeps the
+original public surface (``DeviceIndex``, ``build_device_index``, ``lookup``,
+``predict_positions``) plus the rank primitives built on top of it
+(``bound``, ``range_count``).
 
-    sid   = searchsorted(seg_start, q) - 1            # router (VMEM)
-    pred  = base[sid] + (q - seg_start[sid]) * slope  # VPU FMA
-    rank  = bounded search in keys[pred-e : pred+e]   # one HBM window per query
-
-Two bounded-search strategies are provided (both O(error) bounded):
+Two bounded-search strategies (both O(error) bounded):
   * ``window``  -- gather the 2e+2 window and compare-reduce (vector friendly;
                    what the Pallas kernel does in VMEM);
   * ``bisect``  -- log2(2e) halving steps of single gathers (fewer bytes for
@@ -20,39 +20,28 @@ keys; ``rescale_keys`` maps arbitrary float64 keys into a safe range.
 """
 from __future__ import annotations
 
-from typing import Literal, NamedTuple
+from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .segmentation import Segments, shrinking_cone
+from repro.index.engine import (DeviceIndex, device_index, predict_positions,
+                                xla_lookup)
+from repro.index.table import SegmentTable
 
+from .segmentation import Segments
 
-class DeviceIndex(NamedTuple):
-    seg_start: jax.Array  # (S,) f32  first key of each segment
-    slope: jax.Array      # (S,) f32
-    base: jax.Array       # (S,) i32  global position of segment start
-    seg_end: jax.Array    # (S,) i32  global position one past the segment end
-    keys: jax.Array       # (N,) f32  the sorted key column (HBM resident)
-    error: int            # static
+__all__ = ["DeviceIndex", "build_device_index", "rescale_keys",
+           "predict_positions", "lookup", "bound", "range_count"]
 
 
 def build_device_index(keys: np.ndarray, error: int,
                        segs: Segments | None = None) -> DeviceIndex:
-    keys = np.asarray(keys)
-    if segs is None:
-        segs = shrinking_cone(keys.astype(np.float64), error)
-    base = np.asarray(segs.base, np.int64)
-    seg_end = np.concatenate([base[1:], [keys.shape[0]]])
-    return DeviceIndex(
-        seg_start=jnp.asarray(segs.start_key, jnp.float32),
-        slope=jnp.asarray(segs.slope, jnp.float32),
-        base=jnp.asarray(base, jnp.int32),
-        seg_end=jnp.asarray(seg_end, jnp.int32),
-        keys=jnp.asarray(keys, jnp.float32),
-        error=int(error),
-    )
+    """Segment (if needed) and convert to the f32 device form."""
+    table = SegmentTable.from_keys(np.asarray(keys), error, segs=segs,
+                                   assume_sorted=True)
+    return device_index(table)
 
 
 def rescale_keys(keys: np.ndarray) -> tuple[np.ndarray, float, float]:
@@ -62,48 +51,11 @@ def rescale_keys(keys: np.ndarray) -> tuple[np.ndarray, float, float]:
     return (keys - lo) * scale, lo, scale
 
 
-def predict_positions(idx: DeviceIndex, queries: jax.Array) -> jax.Array:
-    """Interpolated (approximate) global positions; error <= idx.error by Eq. 1.
-
-    Predictions are clamped to the segment's position range so queries falling
-    in inter-segment key gaps cannot overshoot (their true rank is the next
-    segment's base, which stays inside the clamped +-error window)."""
-    sid = jnp.clip(jnp.searchsorted(idx.seg_start, queries, side="right") - 1,
-                   0, idx.seg_start.shape[0] - 1)
-    local = (queries - idx.seg_start[sid]) * idx.slope[sid]
-    pred = idx.base[sid] + jnp.round(local).astype(jnp.int32)
-    return jnp.clip(pred, idx.base[sid], idx.seg_end[sid])
-
-
 def lookup(idx: DeviceIndex, queries: jax.Array,
            strategy: Literal["window", "bisect"] = "window") -> jax.Array:
     """Batched point lookup.  Returns the rank (global position) of each query
     in ``idx.keys`` or -1 if absent.  jit-safe; ``error`` is static."""
-    n = idx.keys.shape[0]
-    pred = predict_positions(idx, queries)
-    e = idx.error
-    if strategy == "window":
-        w = 2 * e + 2
-        start = jnp.clip(pred - e, 0, jnp.maximum(n - w, 0)).astype(jnp.int32)
-        offs = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
-        vals = idx.keys[jnp.minimum(offs, n - 1)]
-        lt = (vals < queries[:, None]).sum(axis=1).astype(jnp.int32)
-        rank = start + lt
-        hit = (vals == queries[:, None]).any(axis=1)
-        return jnp.where(hit, rank, -1)
-    # bisect: lo/hi halving on the clipped window
-    lo = jnp.clip(pred - e, 0, n).astype(jnp.int32)
-    hi = jnp.clip(pred + e + 1, 0, n).astype(jnp.int32)
-    steps = int(np.ceil(np.log2(2 * e + 2)))
-    def body(_, lh):
-        lo, hi = lh
-        mid = (lo + hi) // 2
-        v = idx.keys[jnp.minimum(mid, n - 1)]
-        go = (v < queries) & (lo < hi)
-        return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
-    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    ok = (lo < n) & (idx.keys[jnp.minimum(lo, n - 1)] == queries)
-    return jnp.where(ok, lo, -1)
+    return xla_lookup(idx, queries, strategy)
 
 
 def bound(idx: DeviceIndex, q: jax.Array, side: Literal["left", "right"] = "left"

@@ -19,9 +19,12 @@ column* with a parallel payload array per page (pointers into the table).
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import math
 
 import numpy as np
+
+from repro.index.table import SegmentTable, numpy_lookup, route_keys
 
 from .segmentation import Mode, Segments, shrinking_cone
 
@@ -99,15 +102,18 @@ class FITingTree:
 
     # ------------------------------------------------------------------ build
     def _init_pages(self, keys, payload, segs: Segments):
-        self.start_keys = segs.start_key.copy()
-        self.slopes = segs.slope.copy()
-        bounds = np.concatenate([segs.base, [keys.shape[0]]]).astype(np.int64)
-        self.pages = [keys[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
+        table = SegmentTable.from_segments(keys, segs, error=self.err_seg)
+        self.start_keys = table.start_key.copy()
+        self.slopes = table.slope.copy()
+        self.pages = [table.page(i) for i in range(table.n_segments)]
         self.payloads = (None if payload is None else
-                         [payload[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)])
-        self.buffers: list[list[float]] = [[] for _ in range(segs.n_segments)]
-        self.buf_payloads: list[list] = [[] for _ in range(segs.n_segments)]
+                         [payload[table.base[i]:table.seg_end[i]]
+                          for i in range(table.n_segments)])
+        self.buffers: list[list[float]] = [[] for _ in range(table.n_segments)]
+        self.buf_payloads: list[list] = [[] for _ in range(table.n_segments)]
         self.router = PackedRouter(self.start_keys, self.fanout)
+        self._flat_cache = None
+        self._table_cache: SegmentTable | None = table
 
     # ----------------------------------------------------------------- sizing
     @property
@@ -124,8 +130,7 @@ class FITingTree:
 
     # ----------------------------------------------------------------- lookup
     def _segment_of(self, key: float) -> int:
-        sid = int(np.searchsorted(self.start_keys, key, side="right")) - 1
-        return min(max(sid, 0), self.n_segments - 1)
+        return int(route_keys(self.start_keys, key))
 
     def _window(self, sid: int, key: float) -> tuple[int, int, int]:
         page = self.pages[sid]
@@ -153,26 +158,11 @@ class FITingTree:
 
     def lookup_batch(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized membership probe over the *pages* (buffers excluded; the
-        benchmark path).  Implements the bounded-window binary search exactly as
-        the TPU kernel does: interpolate then log2(2*err) halving steps.
-        Returns the global rank of each found key, -1 if absent from pages."""
-        keys = np.asarray(keys, np.float64)
-        flat, bases = self._flat_view()
-        sid = np.clip(np.searchsorted(self.start_keys, keys, side="right") - 1,
-                      0, self.n_segments - 1)
-        counts = np.asarray([p.shape[0] for p in self.pages], np.int64)
-        pred = bases[sid] + np.rint((keys - self.start_keys[sid]) * self.slopes[sid])
-        lo = np.maximum(bases[sid], pred - self.err_seg).astype(np.int64)
-        hi = np.minimum(bases[sid] + counts[sid], pred + self.err_seg + 1).astype(np.int64)
-        steps = max(1, math.ceil(math.log2(2 * self.err_seg + 2)))
-        for _ in range(steps):
-            mid = (lo + hi) // 2
-            mid_c = np.minimum(mid, flat.shape[0] - 1)
-            go_right = (flat[mid_c] < keys) & (lo < hi)
-            lo = np.where(go_right, mid + 1, lo)
-            hi = np.where(go_right, hi, mid)
-        ok = (lo < flat.shape[0]) & (flat[np.minimum(lo, flat.shape[0] - 1)] == keys)
-        return np.where(ok, lo, -1)
+        benchmark path).  Delegates to the canonical numpy backend over the
+        page snapshot: interpolate then log2(2*err) halving steps, exactly as
+        the TPU kernel does.  Returns the global rank of each found key, -1 if
+        absent from pages."""
+        return numpy_lookup(self.as_table(), keys)
 
     def _flat_view(self):
         if getattr(self, "_flat_cache", None) is None:
@@ -180,6 +170,23 @@ class FITingTree:
             bases = np.concatenate([[0], np.cumsum(counts)[:-1]])
             self._flat_cache = (np.concatenate(self.pages), bases)
         return self._flat_cache
+
+    def as_table(self, epoch: int = 0) -> SegmentTable:
+        """Immutable SegmentTable over the current pages (buffers excluded).
+
+        The table satisfies Eq. 1 with the segmentation budget err_seg, so any
+        ``repro.index.engine`` backend can serve it.  Cached until the next
+        mutation; the returned snapshot never aliases mutable state."""
+        if getattr(self, "_table_cache", None) is None:
+            flat, bases = self._flat_view()
+            counts = np.asarray([p.shape[0] for p in self.pages], np.int64)
+            self._table_cache = SegmentTable(
+                start_key=self.start_keys.copy(), slope=self.slopes.copy(),
+                base=bases.astype(np.int64),
+                seg_end=(bases + counts).astype(np.int64),
+                keys=flat, error=self.err_seg)
+        t = self._table_cache
+        return t if t.epoch == epoch else dataclasses.replace(t, epoch=epoch)
 
     def range_query(self, lo_key: float, hi_key: float) -> np.ndarray:
         """Sec. 4.2: locate the start, then scan forward merging page + buffer."""
@@ -214,12 +221,60 @@ class FITingTree:
         if self.payloads is not None:
             self.buf_payloads[sid].insert(j, value)
         self._flat_cache = None
+        self._table_cache = None
         if len(buf) >= self.buffer_size:
             self._merge_segment(sid)
 
-    def _merge_segment(self, sid: int) -> None:
-        """Alg. 4 lines 5-9: merge buffer into the page, re-run ShrinkingCone,
-        replace one segment with k >= 1 new ones."""
+    def dirty_segments(self) -> list[int]:
+        """Segments whose insert buffer holds keys not yet merged into pages."""
+        return [sid for sid, buf in enumerate(self.buffers) if buf]
+
+    def flush(self) -> int:
+        """Merge every non-empty insert buffer into its page (Alg. 4 lines
+        5-9 applied per dirty segment), re-segmenting only those runs.  The
+        publish path (repro.index.snapshot); returns #segments re-fit.
+
+        All splices land in one pass (one metadata reconcat + one router
+        rebuild), so the cost is O(dirty work + S), not O(dirty * S)."""
+        dirty = set(self.dirty_segments())
+        if not dirty:
+            return 0
+        pages, payloads, buffers, buf_pls = [], [], [], []
+        start_keys, slopes = [], []
+        for sid in range(self.n_segments):
+            if sid in dirty:
+                new_pages, new_payloads, segs = self._refit_segment(sid)
+                pages += new_pages
+                buffers += [[] for _ in range(segs.n_segments)]
+                buf_pls += [[] for _ in range(segs.n_segments)]
+                if new_payloads is not None:
+                    payloads += new_payloads
+                start_keys.append(segs.start_key)
+                slopes.append(segs.slope)
+            else:
+                pages.append(self.pages[sid])
+                buffers.append(self.buffers[sid])
+                buf_pls.append(self.buf_payloads[sid])
+                if self.payloads is not None:
+                    payloads.append(self.payloads[sid])
+                start_keys.append(self.start_keys[sid:sid + 1])
+                slopes.append(self.slopes[sid:sid + 1])
+        self.pages = pages
+        self.buffers = buffers
+        self.buf_payloads = buf_pls
+        if self.payloads is not None:
+            self.payloads = payloads
+        self.start_keys = np.concatenate(start_keys)
+        self.slopes = np.concatenate(slopes)
+        self.router = PackedRouter(self.start_keys, self.fanout)
+        self._flat_cache = None
+        self._table_cache = None
+        return len(dirty)
+
+    def _refit_segment(self, sid: int):
+        """Alg. 4 lines 5-7: merge sid's buffer into its page and re-run
+        ShrinkingCone on the merged run.  Pure: returns (pages, payloads|None,
+        segs) for the k >= 1 replacement segments without mutating the tree."""
         page = self.pages[sid]
         buf = np.asarray(self.buffers[sid], np.float64)
         merged = np.empty(page.shape[0] + buf.shape[0], np.float64)
@@ -228,6 +283,7 @@ class FITingTree:
         mask[pos] = True
         merged[mask] = buf
         merged[~mask] = page
+        pl_merged = None
         if self.payloads is not None:
             pl_page = self.payloads[sid]
             pl_buf = np.asarray(self.buf_payloads[sid])
@@ -237,30 +293,32 @@ class FITingTree:
         segs = shrinking_cone(merged, self.err_seg, mode=self.mode)
         bounds = np.concatenate([segs.base, [merged.shape[0]]]).astype(np.int64)
         new_pages = [merged[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
+        new_payloads = (None if pl_merged is None else
+                        [pl_merged[bounds[i]:bounds[i + 1]]
+                         for i in range(segs.n_segments)])
+        return new_pages, new_payloads, segs
+
+    def _merge_segment(self, sid: int) -> None:
+        """Alg. 4 lines 5-9: replace one overflowed segment in place (the
+        insert hot path; flush() batches the same refit across segments)."""
+        new_pages, new_payloads, segs = self._refit_segment(sid)
+        k = segs.n_segments
         self.pages[sid:sid + 1] = new_pages
-        self.buffers[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
+        self.buffers[sid:sid + 1] = [[] for _ in range(k)]
+        self.buf_payloads[sid:sid + 1] = [[] for _ in range(k)]
         if self.payloads is not None:
-            self.payloads[sid:sid + 1] = [pl_merged[bounds[i]:bounds[i + 1]]
-                                          for i in range(segs.n_segments)]
-            self.buf_payloads[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
-        else:
-            self.buf_payloads[sid:sid + 1] = [[] for _ in range(segs.n_segments)]
+            self.payloads[sid:sid + 1] = new_payloads
         self.start_keys = np.concatenate([
             self.start_keys[:sid], segs.start_key, self.start_keys[sid + 1:]])
         self.slopes = np.concatenate([
             self.slopes[:sid], segs.slope, self.slopes[sid + 1:]])
         self.router = PackedRouter(self.start_keys, self.fanout)
         self._flat_cache = None
+        self._table_cache = None
 
     # ------------------------------------------------------------ invariants
     def max_abs_error(self) -> float:
         """Verify Eq. 1 over every page element (buffers are covered by the
-        err_seg + buffer_size <= error budget, Sec. 5)."""
-        worst = 0.0
-        for sid, page in enumerate(self.pages):
-            if page.shape[0] <= 1:
-                continue
-            pred = (page - self.start_keys[sid]) * self.slopes[sid]
-            true = np.arange(page.shape[0], dtype=np.float64)
-            worst = max(worst, float(np.max(np.abs(pred - true))))
-        return worst
+        err_seg + buffer_size <= error budget, Sec. 5).  Delegates to the
+        canonical check on the page snapshot."""
+        return self.as_table().max_abs_error()

@@ -1,0 +1,37 @@
+"""Canonical index core: one segment table, one router, one engine per backend.
+
+Module map (see ROADMAP.md):
+  table.py    -- immutable ``SegmentTable`` + ``route_keys`` (THE router);
+                 numpy-only, shared by every layer
+  engine.py   -- ``LookupEngine`` registry: numpy / xla-window / xla-bisect /
+                 pallas bounded-window search, ``DeviceIndex`` device form
+  snapshot.py -- epoch publishing: Alg. 4 inserts -> ``publish()`` ->
+                 ``ServingHandle`` atomic swap into serving
+
+``table`` is imported eagerly (pure numpy); the engine/snapshot names are
+resolved lazily (PEP 562) so host-only code -- including the tree's
+``from repro.index.table import ...`` -- never pulls in jax.
+"""
+from .table import SegmentTable, build_shard_tables, numpy_lookup, route_keys
+
+_ENGINE_NAMES = {
+    "DeviceIndex", "LookupEngine", "LookupPlan", "available_backends",
+    "device_index", "make_engine", "make_plan", "pad_keys",
+    "pallas_lookup", "predict_positions", "register_backend", "xla_lookup",
+}
+_SNAPSHOT_NAMES = {"ServingHandle", "Snapshot", "SnapshotPublisher"}
+
+__all__ = [
+    "SegmentTable", "build_shard_tables", "numpy_lookup", "route_keys",
+    *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES),
+]
+
+
+def __getattr__(name):
+    if name in _ENGINE_NAMES:
+        from . import engine
+        return getattr(engine, name)
+    if name in _SNAPSHOT_NAMES:
+        from . import snapshot
+        return getattr(snapshot, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,271 @@
+"""`LookupEngine`: one bounded-window search implementation per backend.
+
+The paper's hot path -- route, interpolate, binary-search the +-error window
+-- used to be hand-rolled four times (host tree, XLA index, Pallas wrapper,
+sharded serving).  It now exists exactly once per backend, behind a registry:
+
+    numpy       host vectorized bounded bisect over the f64 key column
+    xla-window  gather the 2e+2 window and compare-reduce (VPU friendly)
+    xla-bisect  log2(2e) halving steps of single gathers (fewer bytes, big e)
+    pallas      bucketed compare-reduce TPU kernel with XLA-bisect fallback
+
+``make_engine(table, backend=...)`` returns an engine whose ``lookup`` maps a
+query batch to global ranks (-1 if absent).  Backends return identical ranks
+for any duplicate-free key column whose keys and queries are exact in f32
+(e.g. integer keys < 2^24, the serving regime -- see rescale_keys): the
+``numpy`` backend compares in f64 while the device backends compare in f32,
+so a query that is only f32-equal to a stored key can differ in membership
+across that boundary.  ``DeviceIndex`` is the f32 device form of a
+``SegmentTable`` (re-exported by repro.core.jax_index for compatibility).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Literal, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .table import SegmentTable, numpy_lookup
+
+
+class DeviceIndex(NamedTuple):
+    """f32/i32 device form of a SegmentTable (arrays VMEM/HBM friendly)."""
+    seg_start: jax.Array  # (S,) f32  first key of each segment
+    slope: jax.Array      # (S,) f32
+    base: jax.Array       # (S,) i32  global position of segment start
+    seg_end: jax.Array    # (S,) i32  one past the segment end
+    keys: jax.Array       # (N,) f32  the sorted key column (HBM resident)
+    error: int            # static
+
+
+def device_index(table: SegmentTable) -> DeviceIndex:
+    """Convert (and cache on the table -- snapshots are shared by engines)."""
+    dev = getattr(table, "_device_cache", None)
+    if dev is None:
+        dev = DeviceIndex(
+            seg_start=jnp.asarray(table.start_key, jnp.float32),
+            slope=jnp.asarray(table.slope, jnp.float32),
+            base=jnp.asarray(table.base, jnp.int32),
+            seg_end=jnp.asarray(table.seg_end, jnp.int32),
+            keys=jnp.asarray(table.keys, jnp.float32),
+            error=int(table.error),
+        )
+        object.__setattr__(table, "_device_cache", dev)  # frozen dataclass
+    return dev
+
+
+# --------------------------------------------------------------------- device
+def predict_positions(idx: DeviceIndex, queries: jax.Array) -> jax.Array:
+    """Interpolated (approximate) global positions; error <= idx.error by Eq. 1.
+
+    Device mirror of SegmentTable.predict: route, FMA, clamp into the owning
+    segment's position range so inter-segment gap queries cannot overshoot."""
+    sid = jnp.clip(jnp.searchsorted(idx.seg_start, queries, side="right") - 1,
+                   0, idx.seg_start.shape[0] - 1)
+    local = (queries - idx.seg_start[sid]) * idx.slope[sid]
+    pred = idx.base[sid] + jnp.round(local).astype(jnp.int32)
+    return jnp.clip(pred, idx.base[sid], idx.seg_end[sid])
+
+
+def xla_lookup(idx: DeviceIndex, queries: jax.Array,
+               strategy: Literal["window", "bisect"] = "window") -> jax.Array:
+    """Batched point lookup, rank or -1.  jit-safe; ``error`` is static."""
+    n = idx.keys.shape[0]
+    pred = predict_positions(idx, queries)
+    e = idx.error
+    if strategy == "window":
+        w = 2 * e + 2
+        start = jnp.clip(pred - e, 0, jnp.maximum(n - w, 0)).astype(jnp.int32)
+        offs = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        vals = idx.keys[jnp.minimum(offs, n - 1)]
+        lt = (vals < queries[:, None]).sum(axis=1).astype(jnp.int32)
+        rank = start + lt
+        hit = (vals == queries[:, None]).any(axis=1)
+        return jnp.where(hit, rank, -1)
+    # bisect: lo/hi halving on the clipped window
+    lo = jnp.clip(pred - e, 0, n).astype(jnp.int32)
+    hi = jnp.clip(pred + e + 1, 0, n).astype(jnp.int32)
+    steps = int(np.ceil(np.log2(2 * e + 2)))
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        v = idx.keys[jnp.minimum(mid, n - 1)]
+        go = (v < queries) & (lo < hi)
+        return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    ok = (lo < n) & (idx.keys[jnp.minimum(lo, n - 1)] == queries)
+    return jnp.where(ok, lo, -1)
+
+
+# --------------------------------------------------------------------- pallas
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+class LookupPlan(NamedTuple):
+    """Static kernel geometry for a (N, error) pair."""
+    kb: int         # key block size
+    window: int     # 2*error + 2
+    n_blocks: int
+    n_pad: int
+
+
+def make_plan(n_keys: int, error: int) -> LookupPlan:
+    window = 2 * error + 2
+    kb = max(128, _round_up(window, 128))
+    n_pad = _round_up(max(n_keys, kb), kb)
+    return LookupPlan(kb=kb, window=window, n_blocks=n_pad // kb, n_pad=n_pad)
+
+
+def pad_keys(keys: jax.Array, plan: LookupPlan) -> jax.Array:
+    pad = plan.n_pad - keys.shape[0]
+    return jnp.pad(keys.astype(jnp.float32), (0, pad), constant_values=jnp.inf)
+
+
+def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
+                  interpret: bool = True, fallback: bool = True) -> jax.Array:
+    """Batched point lookup via the Pallas kernel.  Returns ranks (-1 absent).
+
+    XLA prelude (router + interpolation + bucketing) -> Pallas compare-reduce
+    kernel -> scatter-back + bisect fallback for bucket overflow.  ``idx.error``
+    must be a Python int (it sizes the kernel window), so jit this via a
+    closure over ``idx`` rather than passing it as a traced argument."""
+    # lazy: repro.kernels imports this module for its thin wrappers
+    from repro.kernels.fitting_lookup import fitting_lookup_pallas
+
+    plan = make_plan(int(idx.keys.shape[0]), int(idx.error))
+    keys_padded = pad_keys(idx.keys, plan)
+    nq = queries.shape[0]
+    queries = queries.astype(jnp.float32)
+
+    # --- XLA prelude: router + interpolation -> window starts -> buckets
+    pred = predict_positions(idx, queries)
+    qlo = jnp.clip(pred - idx.error, 0, plan.n_pad - plan.window).astype(jnp.int32)
+    blk = qlo // plan.kb                                    # owning key block
+    order = jnp.argsort(blk, stable=True)
+    blk_s = blk[order]
+    slot = jnp.arange(nq, dtype=jnp.int32) - jnp.searchsorted(
+        blk_s, blk_s, side="left").astype(jnp.int32)        # rank within bucket
+    ok = slot < qcap
+    q_b = jnp.full((plan.n_blocks, qcap), jnp.inf, jnp.float32)
+    qlo_b = jnp.zeros((plan.n_blocks, qcap), jnp.int32)
+    src_b = jnp.full((plan.n_blocks, qcap), -1, jnp.int32)
+    slot_c = jnp.where(ok, slot, qcap - 1)
+    q_b = q_b.at[blk_s, slot_c].set(jnp.where(ok, queries[order], jnp.inf))
+    qlo_b = qlo_b.at[blk_s, slot_c].set(jnp.where(ok, qlo[order], 0))
+    src_b = src_b.at[blk_s, slot_c].set(jnp.where(ok, order.astype(jnp.int32), -1))
+
+    # --- Pallas kernel over key blocks
+    rank_b, found_b = fitting_lookup_pallas(
+        keys_padded, q_b, qlo_b, kb=plan.kb, window=plan.window,
+        interpret=interpret)
+
+    # --- scatter back
+    res = jnp.full((nq,), jnp.iinfo(jnp.int32).min, jnp.int32)
+    flat_src = src_b.reshape(-1)
+    flat_ans = jnp.where(found_b.reshape(-1), rank_b.reshape(-1), -1)
+    good = flat_src >= 0
+    res = res.at[jnp.clip(flat_src, 0, None)].max(
+        jnp.where(good, flat_ans, jnp.iinfo(jnp.int32).min))
+    answered = res > jnp.iinfo(jnp.int32).min
+    res = jnp.where(answered, res, -1)
+
+    if fallback:
+        # bucket-overflow queries (never bucketed) answered by the XLA bisect
+        # path; lax.cond skips the work entirely when nothing overflowed.
+        was_bucketed = jnp.zeros((nq,), bool).at[jnp.clip(flat_src, 0, None)].max(good)
+        need = ~was_bucketed
+        fb = jax.lax.cond(jnp.any(need),
+                          lambda: xla_lookup(idx, queries, "bisect"),
+                          lambda: res)
+        res = jnp.where(need, fb, res)
+    return res
+
+
+# ------------------------------------------------------------------- registry
+@runtime_checkable
+class LookupEngine(Protocol):
+    """A compiled lookup path over one immutable SegmentTable snapshot."""
+    backend: str
+    table: SegmentTable
+
+    def lookup(self, queries) -> np.ndarray:
+        """Global rank of each query, -1 if absent (host array out)."""
+        ...
+
+
+_BACKENDS: dict[str, Callable[..., LookupEngine]] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        cls.backend = name
+        _BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def make_engine(table: SegmentTable, backend: str = "numpy", **opts) -> LookupEngine:
+    """The one constructor every layer (ops, distributed, serving, benchmarks)
+    goes through to get a lookup path."""
+    try:
+        cls = _BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"available: {available_backends()}") from None
+    return cls(table, **opts)
+
+
+@register_backend("numpy")
+class NumpyEngine:
+    def __init__(self, table: SegmentTable):
+        self.table = table
+        self.fn = functools.partial(numpy_lookup, table)
+
+    def lookup(self, queries) -> np.ndarray:
+        return self.fn(queries)
+
+
+class _DeviceEngine:
+    """Shared scaffolding: convert the table once, jit a closure over it."""
+
+    def __init__(self, table: SegmentTable):
+        self.table = table
+        self.index = device_index(table)
+
+    def lookup(self, queries) -> np.ndarray:
+        return np.asarray(self.fn(jnp.asarray(queries, jnp.float32)))
+
+
+@register_backend("xla-window")
+class XlaWindowEngine(_DeviceEngine):
+    def __init__(self, table: SegmentTable):
+        super().__init__(table)
+        self.fn = jax.jit(functools.partial(xla_lookup, self.index,
+                                            strategy="window"))
+
+
+@register_backend("xla-bisect")
+class XlaBisectEngine(_DeviceEngine):
+    def __init__(self, table: SegmentTable):
+        super().__init__(table)
+        self.fn = jax.jit(functools.partial(xla_lookup, self.index,
+                                            strategy="bisect"))
+
+
+@register_backend("pallas")
+class PallasEngine(_DeviceEngine):
+    def __init__(self, table: SegmentTable, *, qcap: int = 256,
+                 interpret: bool = True, fallback: bool = True):
+        super().__init__(table)
+        self.fn = jax.jit(functools.partial(pallas_lookup, self.index,
+                                            qcap=qcap, interpret=interpret,
+                                            fallback=fallback))

@@ -1,0 +1,125 @@
+"""Epoch-snapshot publishing: the route from Alg. 4 inserts to serving.
+
+The mutable host ``FITingTree`` buffers inserts per segment (Sec. 5); device
+and sharded serving run over an *immutable* ``SegmentTable``.  This module
+connects the two:
+
+    tree.insert(k) ...                 # Alg. 4, buffered, host-side
+    snap = publisher.publish()         # flush dirty segments -> new table
+    handle.install(snap)               # atomic swap; readers never block
+
+``publish`` is incremental: only segments whose buffer is non-empty are merged
+and re-segmented (ShrinkingCone over just that run, exactly Alg. 4 lines 5-9);
+clean segments keep their fitted lines.  The resulting table satisfies Eq. 1
+with the tree's segmentation budget err_seg <= error, so every engine backend
+serves the bound unchanged.
+
+``ServingHandle`` is the serving-side anchor: ``install`` swaps the current
+(snapshot, engine-cache) pair with a single reference assignment, so an
+in-flight ``lookup`` that already pinned the old pair keeps a fully consistent
+view (epoch semantics, no torn reads, no reader locks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from .engine import LookupEngine, make_engine
+from .table import SegmentTable
+
+if TYPE_CHECKING:  # avoid a module-level cycle with repro.core
+    from repro.core.tree import FITingTree
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One published epoch of the index."""
+    table: SegmentTable
+    epoch: int
+    n_refit: int  # dirty segments re-segmented by this publish
+
+    @property
+    def n_keys(self) -> int:
+        return self.table.n_keys
+
+
+class SnapshotPublisher:
+    """Write-side: turns a mutable FITingTree into a stream of snapshots."""
+
+    def __init__(self, tree: "FITingTree"):
+        self.tree = tree
+        self._epoch = 0
+
+    @property
+    def epoch(self) -> int:
+        """Epoch of the last publish (0 = nothing published yet)."""
+        return self._epoch
+
+    def dirty_segments(self) -> list[int]:
+        """Segments with buffered inserts not yet visible to serving."""
+        return self.tree.dirty_segments()
+
+    def publish(self) -> Snapshot:
+        """Flush dirty segments and emit a fresh immutable snapshot.
+
+        Cost is O(sum of dirty segment lengths) for the re-fit plus O(N + S)
+        to assemble the flat arrays; clean segments are never re-segmented.
+        """
+        n_refit = self.tree.flush()
+        self._epoch += 1
+        table = self.tree.as_table(epoch=self._epoch)
+        return Snapshot(table=table, epoch=self._epoch, n_refit=n_refit)
+
+
+class ServingHandle:
+    """Read-side: pin-and-lookup over the latest installed snapshot.
+
+    Engines are built lazily per backend per snapshot and cached alongside the
+    snapshot they serve, so a swap atomically retires both the table and its
+    compiled lookup closures.
+    """
+
+    def __init__(self, engine_opts: dict[str, dict] | None = None):
+        self._engine_opts = engine_opts or {}
+        self._lock = threading.Lock()
+        self._state: tuple[Snapshot, dict[str, LookupEngine]] | None = None
+
+    @property
+    def epoch(self) -> int:
+        state = self._state
+        return 0 if state is None else state[0].epoch
+
+    def current(self) -> Snapshot:
+        state = self._state
+        if state is None:
+            raise RuntimeError("no snapshot installed yet")
+        return state[0]
+
+    def install(self, snapshot: Snapshot) -> None:
+        """Atomic swap: one reference assignment publishes the new epoch."""
+        self._state = (snapshot, {})
+
+    def engine(self, backend: str = "numpy") -> LookupEngine:
+        snapshot, engines = self._pin()
+        eng = engines.get(backend)
+        if eng is None:
+            with self._lock:
+                eng = engines.get(backend)
+                if eng is None:
+                    eng = make_engine(snapshot.table, backend,
+                                      **self._engine_opts.get(backend, {}))
+                    engines[backend] = eng
+        return eng
+
+    def lookup(self, queries, backend: str = "numpy") -> np.ndarray:
+        """Rank of each query in the current snapshot, -1 if absent."""
+        return self.engine(backend).lookup(queries)
+
+    def _pin(self) -> tuple[Snapshot, dict[str, LookupEngine]]:
+        state = self._state
+        if state is None:
+            raise RuntimeError("no snapshot installed yet")
+        return state

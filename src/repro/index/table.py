@@ -1,0 +1,181 @@
+"""`SegmentTable`: the canonical, immutable form of the FITing-Tree index.
+
+Every layer of the repo (host tree, XLA index, Pallas kernel plan, sharded
+serving) used to build its own copy of the segment geometry; this module is now
+the single source of truth.  A table is four parallel segment arrays plus the
+sorted key column:
+
+    position(k) ~ base[s] + (k - start_key[s]) * slope[s],   s = route(k)
+
+with the paper's Eq. 1 guarantee |position(k) - true_rank(k)| <= error for
+every key present in ``keys``.
+
+The *router* -- rightmost segment whose start key is <= k -- is implemented
+exactly once, in :func:`route_keys`; the host tree, the numpy engine and (in
+f32 form) the device engines in ``repro.index.engine`` all defer to this
+module's semantics.
+
+This module is deliberately numpy-only (no jax import) so host-side code can
+use it without touching an accelerator runtime; device conversion lives in
+``repro.index.engine``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:  # avoid a module-level cycle with repro.core
+    from repro.core.segmentation import Mode, Segments
+
+
+def route_keys(start_keys: np.ndarray, queries) -> np.ndarray:
+    """THE router (Alg. 3 line 1): rightmost segment with start_key <= q.
+
+    Queries below the first start key clamp to segment 0, above the last to
+    the final segment.  All other route implementations in the repo must agree
+    with this one (the device engines mirror it in f32).
+    """
+    sid = np.searchsorted(start_keys, queries, side="right") - 1
+    return np.clip(sid, 0, start_keys.shape[0] - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentTable:
+    """Immutable packed index: segment metadata + the sorted key column.
+
+    ``error`` is the bound the segmentation satisfies over ``keys`` (for a
+    tree with an insert buffer this is the *segmentation* budget err_seg, so
+    the user-visible bound still holds; see tree.py Sec. 5 notes).  ``epoch``
+    tags published snapshots (see repro.index.snapshot); 0 means "built from
+    scratch".
+    """
+
+    start_key: np.ndarray  # (S,) f64  first key of each segment
+    slope: np.ndarray      # (S,) f64  positions per key unit
+    base: np.ndarray       # (S,) i64  global rank of the segment's first key
+    seg_end: np.ndarray    # (S,) i64  one past the segment's last rank
+    keys: np.ndarray       # (N,) f64  the sorted key column
+    error: int
+    epoch: int = 0
+
+    # ----------------------------------------------------------- construction
+    @classmethod
+    def from_segments(cls, keys: np.ndarray, segs: "Segments",
+                      error: int | None = None, epoch: int = 0) -> "SegmentTable":
+        """Package a ShrinkingCone/DP output and its key column as a table.
+
+        The key column is always copied: a table must never alias a buffer
+        the caller (or the mutable tree) could write through."""
+        keys = np.array(keys, np.float64, copy=True)
+        base = np.asarray(segs.base, np.int64)
+        seg_end = np.concatenate([base[1:], [keys.shape[0]]]).astype(np.int64)
+        return cls(
+            start_key=np.asarray(segs.start_key, np.float64),
+            slope=np.asarray(segs.slope, np.float64),
+            base=base,
+            seg_end=seg_end,
+            keys=keys,
+            error=int(segs.error if error is None else error),
+            epoch=int(epoch),
+        )
+
+    @classmethod
+    def from_keys(cls, keys: np.ndarray, error: int, *, mode: "Mode" = "paper",
+                  segs: "Segments | None" = None, assume_sorted: bool = False,
+                  epoch: int = 0) -> "SegmentTable":
+        """Segment ``keys`` (Alg. 2) and build the table in one step."""
+        from repro.core.segmentation import shrinking_cone  # lazy: no cycle
+        keys = np.asarray(keys, np.float64)
+        if not assume_sorted:
+            keys = np.sort(keys, kind="stable")
+        if segs is None:
+            segs = shrinking_cone(keys, error, mode=mode)
+        return cls.from_segments(keys, segs, error=error, epoch=epoch)
+
+    # ----------------------------------------------------------------- sizing
+    @property
+    def n_segments(self) -> int:
+        return int(self.start_key.shape[0])
+
+    @property
+    def n_keys(self) -> int:
+        return int(self.keys.shape[0])
+
+    def size_bytes(self) -> int:
+        """Sec. 6.2 accounting: 24B of metadata per segment."""
+        return self.n_segments * 24
+
+    # ----------------------------------------------------------------- lookup
+    def route(self, queries) -> np.ndarray:
+        return route_keys(self.start_key, np.asarray(queries, np.float64))
+
+    def _locate(self, queries) -> tuple[np.ndarray, np.ndarray]:
+        """Route + interpolate: (segment id, predicted rank clamped into the
+        owning segment's range so gap queries cannot overshoot).  The one
+        prediction implementation (the device path mirrors it in f32)."""
+        q = np.asarray(queries, np.float64)
+        sid = self.route(q)
+        local = np.rint((q - self.start_key[sid]) * self.slope[sid])
+        pred = self.base[sid] + local.astype(np.int64)
+        return sid, np.clip(pred, self.base[sid], self.seg_end[sid])
+
+    def predict(self, queries) -> np.ndarray:
+        """Predicted global ranks; within ``error`` of the true rank (Eq. 1)."""
+        return self._locate(queries)[1]
+
+    def window(self, queries) -> tuple[np.ndarray, np.ndarray]:
+        """Per-query [lo, hi) rank window guaranteed to contain any present key."""
+        sid, pred = self._locate(queries)
+        lo = np.maximum(self.base[sid], pred - self.error)
+        hi = np.minimum(self.seg_end[sid], pred + self.error + 1)
+        return lo.astype(np.int64), hi.astype(np.int64)
+
+    def page(self, sid: int) -> np.ndarray:
+        """The sid-th segment's slice of the key column (a view)."""
+        return self.keys[self.base[sid]:self.seg_end[sid]]
+
+    # ------------------------------------------------------------ invariants
+    def max_abs_error(self) -> float:
+        """Eq. 1 check: max |predicted - true| rank over every stored key,
+        each evaluated against its containing segment."""
+        n = self.n_keys
+        if n == 0:
+            return 0.0
+        true = np.arange(n, dtype=np.float64)
+        sid = np.searchsorted(self.base, true, side="right") - 1
+        pred = self.base[sid] + (self.keys - self.start_key[sid]) * self.slope[sid]
+        return float(np.max(np.abs(pred - true)))
+
+
+def numpy_lookup(table: SegmentTable, queries) -> np.ndarray:
+    """Host bounded bisect over the f64 key column (the ``numpy`` engine
+    backend and the tree's batch path): interpolate then log2(2*err) halving
+    steps inside the window.  Returns global ranks, -1 if absent."""
+    q = np.asarray(queries, np.float64)
+    lo, hi = table.window(q)
+    keys = table.keys
+    n = keys.shape[0]
+    steps = max(1, math.ceil(math.log2(2 * table.error + 2)))
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        mid_c = np.minimum(mid, max(n - 1, 0))
+        go_right = (keys[mid_c] < q) & (lo < hi)
+        lo = np.where(go_right, mid + 1, lo)
+        hi = np.where(go_right, hi, mid)
+    ok = (lo < n) & (keys[np.minimum(lo, max(n - 1, 0))] == q)
+    return np.where(ok, lo, -1).astype(np.int64)
+
+
+def build_shard_tables(keys: np.ndarray, error: int, n_shards: int,
+                       mode: "Mode" = "paper") -> list[SegmentTable]:
+    """Equal-count contiguous range partition: one independent SegmentTable per
+    shard (local ranks).  The tail beyond ``n_shards * (n // n_shards)`` is
+    dropped, as in the original sharded builder (callers handle it)."""
+    keys = np.asarray(keys, np.float64)
+    m = keys.shape[0] // n_shards
+    shards = keys[: m * n_shards].reshape(n_shards, m)
+    return [SegmentTable.from_keys(s, error, mode=mode, assume_sorted=True)
+            for s in shards]

@@ -1,47 +1,25 @@
-"""jit'd wrappers around the Pallas kernels.
+"""jit'd wrappers around the Pallas kernels (thin compatibility layer).
 
 ``fitting_lookup``: XLA prelude (router + interpolation + bucketing) ->
 Pallas compare-reduce kernel -> scatter-back + bisect fallback for bucket
-overflow.  Equivalent to ``ref.lookup_ref`` on every input (tests sweep
-shapes/dtypes/errors); the kernel path answers all queries whenever each key
-block starts at most QCAP windows (overflow is per-block, flagged, and rare
-for non-adversarial batches).
+overflow.  The orchestration now lives once in ``repro.index.engine``
+(``pallas_lookup`` / the ``pallas`` backend of ``make_engine``); this module
+keeps the historical entry points.  Equivalent to ``ref.lookup_ref`` on every
+input (tests sweep shapes/dtypes/errors); the kernel path answers all queries
+whenever each key block starts at most QCAP windows (overflow is per-block,
+flagged, and rare for non-adversarial batches).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.jax_index import DeviceIndex, lookup as _xla_lookup, predict_positions
-from .fitting_lookup import fitting_lookup_pallas
+from repro.index.engine import (DeviceIndex, LookupPlan, make_plan, pad_keys,
+                                pallas_lookup)
 
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-class LookupPlan(NamedTuple):
-    """Static geometry for a (N, error) pair."""
-    kb: int         # key block size
-    window: int     # 2*error + 2
-    n_blocks: int
-    n_pad: int
-
-
-def make_plan(n_keys: int, error: int) -> LookupPlan:
-    window = 2 * error + 2
-    kb = max(128, _round_up(window, 128))
-    n_pad = _round_up(max(n_keys, kb), kb)
-    return LookupPlan(kb=kb, window=window, n_blocks=n_pad // kb, n_pad=n_pad)
-
-
-def pad_keys(keys: jax.Array, plan: LookupPlan) -> jax.Array:
-    pad = plan.n_pad - keys.shape[0]
-    return jnp.pad(keys.astype(jnp.float32), (0, pad), constant_values=jnp.inf)
+__all__ = ["LookupPlan", "make_plan", "pad_keys", "fitting_lookup",
+           "make_lookup_fn"]
 
 
 def make_lookup_fn(idx: DeviceIndex, *, qcap: int = 256, interpret: bool = True,
@@ -58,50 +36,5 @@ def fitting_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
     ``idx.error`` must be a Python int (it sizes the kernel window), so jit
     this via ``make_lookup_fn`` (closure) rather than passing idx as a traced
     argument."""
-    plan = make_plan(int(idx.keys.shape[0]), int(idx.error))
-    keys_padded = pad_keys(idx.keys, plan)
-    nq = queries.shape[0]
-    queries = queries.astype(jnp.float32)
-
-    # --- XLA prelude: router + interpolation -> window starts -> buckets
-    pred = predict_positions(idx, queries)
-    qlo = jnp.clip(pred - idx.error, 0, plan.n_pad - plan.window).astype(jnp.int32)
-    blk = qlo // plan.kb                                    # owning key block
-    order = jnp.argsort(blk, stable=True)
-    blk_s = blk[order]
-    slot = jnp.arange(nq, dtype=jnp.int32) - jnp.searchsorted(
-        blk_s, blk_s, side="left").astype(jnp.int32)        # rank within bucket
-    ok = slot < qcap
-    q_b = jnp.full((plan.n_blocks, qcap), jnp.inf, jnp.float32)
-    qlo_b = jnp.zeros((plan.n_blocks, qcap), jnp.int32)
-    src_b = jnp.full((plan.n_blocks, qcap), -1, jnp.int32)
-    slot_c = jnp.where(ok, slot, qcap - 1)
-    q_b = q_b.at[blk_s, slot_c].set(jnp.where(ok, queries[order], jnp.inf))
-    qlo_b = qlo_b.at[blk_s, slot_c].set(jnp.where(ok, qlo[order], 0))
-    src_b = src_b.at[blk_s, slot_c].set(jnp.where(ok, order.astype(jnp.int32), -1))
-
-    # --- Pallas kernel over key blocks
-    rank_b, found_b = fitting_lookup_pallas(
-        keys_padded, q_b, qlo_b, kb=plan.kb, window=plan.window,
-        interpret=interpret)
-
-    # --- scatter back
-    res = jnp.full((nq,), jnp.iinfo(jnp.int32).min, jnp.int32)
-    flat_src = src_b.reshape(-1)
-    flat_ans = jnp.where(found_b.reshape(-1), rank_b.reshape(-1), -1)
-    good = flat_src >= 0
-    res = res.at[jnp.clip(flat_src, 0, None)].max(
-        jnp.where(good, flat_ans, jnp.iinfo(jnp.int32).min))
-    answered = res > jnp.iinfo(jnp.int32).min
-    res = jnp.where(answered, res, -1)
-
-    if fallback:
-        # bucket-overflow queries (never bucketed) answered by the XLA bisect
-        # path; lax.cond skips the work entirely when nothing overflowed.
-        was_bucketed = jnp.zeros((nq,), bool).at[jnp.clip(flat_src, 0, None)].max(good)
-        need = ~was_bucketed
-        fb = jax.lax.cond(jnp.any(need),
-                          lambda: _xla_lookup(idx, queries, "bisect"),
-                          lambda: res)
-        res = jnp.where(need, fb, res)
-    return res
+    return pallas_lookup(idx, queries, qcap=qcap, interpret=interpret,
+                         fallback=fallback)

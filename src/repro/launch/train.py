@@ -149,6 +149,12 @@ def main(argv=None):
                   f"({(time.time()-t0)/(step-start_step+1):.2f}s/step)",
                   flush=True)
         if args.die_at_step == step:
+            if saver:
+                # deterministic fault injection: the failure is "after the
+                # last checkpoint completed", not "racing the async writer"
+                # (the torn-write case is covered by the atomicity design:
+                # readers ignore dirs without a DONE marker)
+                saver.wait()
             print(f"SIMULATED FAILURE at step {step}", flush=True)
             os._exit(42)
         if saver and (step + 1) % args.ckpt_every == 0:

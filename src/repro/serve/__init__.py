@@ -1,1 +1,4 @@
-"""Serving steps, paged KV cache, batching."""
+"""Serving steps, paged KV cache, batching, and index snapshot serving."""
+from .index_service import IndexService
+
+__all__ = ["IndexService"]

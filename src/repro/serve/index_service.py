@@ -1,0 +1,77 @@
+"""Index serving: epoch-snapshot front end over the unified index core.
+
+Composes the write path (mutable ``FITingTree``, Alg. 4 buffered inserts) with
+the read path (immutable ``SegmentTable`` snapshots served by any
+``repro.index.engine`` backend) the same way the LM serving stack threads
+caches through steps: writers mutate, ``publish`` cuts an epoch, and the
+serving handle swaps the snapshot atomically so in-flight lookups keep a
+consistent view.
+
+    svc = IndexService(keys, error=64, buffer_size=16, backend="pallas")
+    svc.lookup(q)            # epoch 1 (built at construction)
+    svc.insert(k); ...       # buffered; serving unaffected
+    svc.publish()            # epoch 2: inserts now visible to every backend
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tree import FITingTree
+from repro.index.snapshot import ServingHandle, Snapshot, SnapshotPublisher
+
+
+class IndexService:
+    """One writable index + its serving handle, with optional auto-publish."""
+
+    def __init__(self, keys: np.ndarray, error: int, *, buffer_size: int = 0,
+                 payload: np.ndarray | None = None, mode: str = "paper",
+                 backend: str = "numpy",
+                 engine_opts: dict[str, dict] | None = None,
+                 publish_every: int | None = None):
+        if publish_every is not None and buffer_size == 0:
+            raise ValueError("publish_every requires buffer_size > 0 "
+                             "(a read-only service never republishes)")
+        self.tree = FITingTree(keys, error=error, buffer_size=buffer_size,
+                               mode=mode, payload=payload)
+        self.default_backend = backend
+        self.publisher = SnapshotPublisher(self.tree)
+        self.handle = ServingHandle(engine_opts)
+        self.publish_every = publish_every
+        self._pending = 0
+        self.handle.install(self.publisher.publish())
+
+    # ------------------------------------------------------------- write path
+    def insert(self, key: float, value=None) -> None:
+        """Buffer an insert (Alg. 4).  Not visible to lookups until publish."""
+        if self.tree.buffer_size == 0:
+            raise ValueError("IndexService built read-only; pass "
+                             "buffer_size > 0 to enable inserts")
+        if value is not None and self.tree.payloads is None:
+            raise ValueError("IndexService built without payloads (clustered "
+                             "index); pass payload= at construction to store "
+                             "values")
+        self.tree.insert(key, value)
+        self._pending += 1
+        if self.publish_every is not None and self._pending >= self.publish_every:
+            self.publish()
+
+    def publish(self) -> Snapshot:
+        """Cut a new epoch and swap it into serving atomically."""
+        snap = self.publisher.publish()
+        self.handle.install(snap)
+        self._pending = 0
+        return snap
+
+    # -------------------------------------------------------------- read path
+    def lookup(self, queries, backend: str | None = None) -> np.ndarray:
+        """Rank of each query in the current epoch's key column, -1 if absent."""
+        return self.handle.lookup(queries, backend or self.default_backend)
+
+    @property
+    def epoch(self) -> int:
+        return self.handle.epoch
+
+    @property
+    def pending_inserts(self) -> int:
+        """Inserts buffered since the last publish (invisible to serving)."""
+        return self._pending

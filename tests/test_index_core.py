@@ -1,0 +1,180 @@
+"""Unified index core: SegmentTable + engines + epoch-snapshot publishing.
+
+Asserts (a) every registered engine backend agrees with the independent
+``ref.lookup_ref`` oracle on shared property-based inputs, (b) the round trip
+``build -> insert x k -> publish() -> pallas/xla/numpy lookup`` returns
+identical ranks across backends, and (c) publishing preserves the Eq. 1 error
+bound after inserts.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FITingTree
+from repro.core.jax_index import build_device_index
+from repro.index import (SegmentTable, ServingHandle, SnapshotPublisher,
+                         available_backends, device_index, make_engine,
+                         route_keys)
+from repro.kernels.ref import lookup_ref
+from repro.serve import IndexService
+
+ALL_BACKENDS = ("numpy", "xla-window", "xla-bisect", "pallas")
+
+
+def _distinct_keys(n, seed=0, lim=2 ** 23):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(lim, size=n, replace=False)).astype(np.float64)
+
+
+def _oracle(keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    return np.asarray(lookup_ref(jnp.asarray(keys, jnp.float32),
+                                 jnp.asarray(queries, jnp.float32)))
+
+
+def test_backend_registry_complete():
+    assert set(ALL_BACKENDS) <= set(available_backends())
+    with pytest.raises(ValueError, match="unknown backend"):
+        make_engine(SegmentTable.from_keys(np.arange(8.0), 4), "no-such")
+
+
+@given(seed=st.integers(0, 40), error=st.sampled_from([4, 16, 63, 128]),
+       n=st.sampled_from([64, 500, 3000]))
+@settings(max_examples=15, deadline=None)
+def test_property_all_backends_match_oracle(seed, error, n):
+    keys = _distinct_keys(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    q = np.concatenate([keys[rng.integers(0, n, size=96)],
+                        rng.uniform(0, 2 ** 23, size=32)])  # present + absent
+    table = SegmentTable.from_keys(keys, error, assume_sorted=True)
+    want = _oracle(keys, q)
+    for backend in ALL_BACKENDS:
+        got = np.asarray(make_engine(table, backend).lookup(q))
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+
+
+def test_round_trip_insert_publish_identical_ranks():
+    """Acceptance: build -> insert x k -> publish() -> every backend returns
+    identical ranks, reflecting the inserts."""
+    keys = _distinct_keys(4000, seed=2)
+    rng = np.random.default_rng(3)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=2000, replace=False).astype(np.float64), keys)
+    new = fresh[:600]
+    tree = FITingTree(keys, error=64, buffer_size=16)
+    for k in new:
+        tree.insert(float(k))
+
+    pub = SnapshotPublisher(tree)
+    snap = pub.publish()
+    union = np.sort(np.concatenate([keys, new]))
+    np.testing.assert_array_equal(snap.table.keys, union)
+    assert snap.epoch == 1 and snap.n_refit > 0
+
+    q = np.concatenate([new[::5], keys[::97], fresh[600:700]])  # last are absent
+    want = _oracle(union, q)
+    results = {b: np.asarray(make_engine(snap.table, b).lookup(q))
+               for b in ALL_BACKENDS}
+    for b, got in results.items():
+        np.testing.assert_array_equal(got, want, err_msg=b)
+
+
+def test_publish_preserves_error_bound():
+    """Eq. 1 must survive insert-heavy epochs (Sec. 5 budget)."""
+    keys = _distinct_keys(8000, seed=5)
+    tree = FITingTree(keys, error=32, buffer_size=8)
+    pub = SnapshotPublisher(tree)
+    rng = np.random.default_rng(6)
+    for round_ in range(3):
+        for k in rng.uniform(0, 2 ** 23, size=500):
+            tree.insert(float(k))
+        snap = pub.publish()
+        assert snap.epoch == round_ + 1
+        assert snap.table.max_abs_error() <= snap.table.error + 1e-6
+        assert len(pub.dirty_segments()) == 0   # publish flushed everything
+
+
+def test_serving_handle_atomic_swap():
+    keys = _distinct_keys(2000, seed=7)
+    tree = FITingTree(keys, error=64, buffer_size=16)
+    pub = SnapshotPublisher(tree)
+    handle = ServingHandle()
+    handle.install(pub.publish())
+    old = handle.current()
+
+    new_key = float(np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)[0])
+    tree.insert(new_key)
+    assert handle.lookup(np.asarray([new_key]))[0] == -1  # not published yet
+
+    handle.install(pub.publish())
+    assert handle.epoch == 2
+    assert handle.lookup(np.asarray([new_key]))[0] >= 0
+    # the retired snapshot is immutable: still serves its own epoch correctly
+    assert make_engine(old.table, "numpy").lookup(np.asarray([new_key]))[0] == -1
+
+
+def test_index_service_epoch_visibility():
+    keys = _distinct_keys(3000, seed=8)
+    svc = IndexService(keys, error=64, buffer_size=16, backend="numpy")
+    assert svc.epoch == 1
+    new_key = float(np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)[0])
+    svc.insert(new_key)
+    assert svc.pending_inserts == 1
+    assert svc.lookup(np.asarray([new_key]))[0] == -1
+    svc.publish()
+    assert svc.epoch == 2 and svc.pending_inserts == 0
+    for backend in ALL_BACKENDS:
+        assert svc.lookup(np.asarray([new_key]), backend)[0] >= 0
+
+
+def test_index_service_auto_publish():
+    keys = _distinct_keys(2000, seed=9)
+    svc = IndexService(keys, error=64, buffer_size=32, backend="numpy",
+                       publish_every=10)
+    fresh = np.setdiff1d(np.arange(4000, dtype=np.float64), keys)[:10]
+    for k in fresh:
+        svc.insert(float(k))
+    assert svc.epoch == 2                       # 10th insert cut an epoch
+    assert np.all(svc.lookup(fresh) >= 0)
+
+
+def test_router_single_source_of_truth():
+    """Host tree routing and table routing are the same function."""
+    keys = _distinct_keys(5000, seed=10)
+    tree = FITingTree(keys, error=32)
+    table = tree.as_table()
+    q = np.random.default_rng(11).uniform(0, 2 ** 23, size=300)
+    np.testing.assert_array_equal(
+        table.route(q), route_keys(tree.start_keys, q))
+    for k in q[:20]:
+        assert tree._segment_of(float(k)) == int(table.route(k))
+
+
+def test_device_index_matches_legacy_builder():
+    keys = _distinct_keys(3000, seed=12)
+    table = SegmentTable.from_keys(keys, 16, assume_sorted=True)
+    via_table = device_index(table)
+    via_legacy = build_device_index(keys, 16)
+    for a, b in zip(via_table[:5], via_legacy[:5]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert via_table.error == via_legacy.error == 16
+
+
+def test_snapshot_never_aliases_caller_buffer():
+    """A published table must survive the caller scribbling over their keys."""
+    keys = _distinct_keys(3000, seed=14)
+    probe = float(keys[123])
+    tree = FITingTree(keys, error=32, buffer_size=8, assume_sorted=True)
+    snap = SnapshotPublisher(tree).publish()
+    keys[123] = 9e9
+    assert snap.table.keys[123] == probe
+    assert make_engine(snap.table, "numpy").lookup(np.asarray([probe]))[0] == 123
+
+
+def test_table_window_contains_every_key():
+    keys = _distinct_keys(10_000, seed=13)
+    table = SegmentTable.from_keys(keys, 24, assume_sorted=True)
+    lo, hi = table.window(keys)
+    true = np.arange(keys.shape[0])
+    assert np.all((lo <= true) & (true < hi))
+    assert table.max_abs_error() <= table.error + 1e-6

@@ -11,8 +11,15 @@ from repro.launch.hlo_analysis import (analyze_collectives, shape_bytes,
 from repro.launch.sharding import batch_spec, cache_spec, param_spec
 from repro.launch.specs import input_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(sizes, names)              # jax >= 0.4.38 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # jax <= 0.4.37 signature
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class Leaf:
