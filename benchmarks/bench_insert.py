@@ -17,22 +17,22 @@ N_INS = 20_000
 ERRORS = [64, 256, 1024, 4096]
 
 
-def run():
+def run(n: int = N, n_ins: int = N_INS, errors=ERRORS):
     rows = []
     publish_rows = []
     rng = np.random.default_rng(1)
     for name, make in [("weblogs", weblogs_like), ("iot", iot_like)]:
-        keys = make(N)
+        keys = make(n)
         lo, hi = keys[0], keys[-1]
-        new = rng.uniform(lo, hi, size=N_INS)
-        for e in ERRORS:
+        new = rng.uniform(lo, hi, size=n_ins)
+        for e in errors:
             tree = FITingTree(keys, error=e, buffer_size=e // 2,
                               assume_sorted=True)
             t0 = time.perf_counter()
             for k in new:
                 tree.insert(k)
             dt = time.perf_counter() - t0
-            rows.append((name, "fiting", e, N_INS / dt))
+            rows.append((name, "fiting", e, n_ins / dt))
             # epoch publish cost: dirty-segment flush + snapshot assembly
             pub = SnapshotPublisher(tree)
             t0 = time.perf_counter()
@@ -44,10 +44,11 @@ def run():
             for k in new:
                 fx.insert(k)
             dt = time.perf_counter() - t0
-            rows.append((name, "fixed", e, N_INS / dt))
-        emit("fig7", f"{name}_inserts_per_s_e1024",
+            rows.append((name, "fixed", e, n_ins / dt))
+        e_head = 1024 if 1024 in errors else errors[-1]
+        emit("fig7", f"{name}_inserts_per_s_e{e_head}",
              next(r[3] for r in rows if r[0] == name and r[1] == "fiting"
-                  and r[2] == 1024))
+                  and r[2] == e_head))
     write_csv("fig7_insert", ["dataset", "method", "error", "inserts_per_s"],
               rows)
     write_csv("fig7_publish", ["dataset", "error", "segments_refit",

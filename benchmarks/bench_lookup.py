@@ -17,32 +17,33 @@ ERRORS = [16, 64, 256, 1024, 4096, 16384]
 PAGES = [16, 64, 256, 1024, 4096, 16384]
 
 
-def run():
+def run(n: int = N, nq: int = NQ, errors=ERRORS, pages=PAGES):
     rows = []
     rng = np.random.default_rng(0)
     for name, make in [("weblogs", weblogs_like), ("iot", iot_like),
                        ("maps", maps_like)]:
-        keys = make(N)
-        q = keys[rng.integers(0, N, size=NQ)]
+        keys = make(n)
+        q = keys[rng.integers(0, n, size=nq)]
 
         full = FullIndex(keys)
         t = timeit(full.lookup_batch, q)
-        rows.append((name, "full", 0, full.size_bytes(), t / NQ * 1e9))
+        rows.append((name, "full", 0, full.size_bytes(), t / nq * 1e9))
         bs = BinarySearch(keys)
         t = timeit(bs.lookup_batch, q)
-        rows.append((name, "binary", 0, 0, t / NQ * 1e9))
+        rows.append((name, "binary", 0, 0, t / nq * 1e9))
 
-        for e in ERRORS:
+        for e in errors:
             tree = FITingTree(keys, error=e, assume_sorted=True)
             eng = make_engine(tree.as_table(), "numpy")  # the canonical path
             t = timeit(eng.lookup, q)
             rows.append((name, "fiting", e, tree.index_size_bytes(),
-                         t / NQ * 1e9))
-        for p in PAGES:
+                         t / nq * 1e9))
+        for p in pages:
             fx = FixedPagedIndex(keys, page_size=p)
+            sub = min(nq, 2000)
             t = timeit(fx.lookup_batch, q) if p >= 256 else \
-                timeit(fx.lookup_batch, q[:2000]) * (NQ / 2000)
-            rows.append((name, "fixed", p, fx.size_bytes(), t / NQ * 1e9))
+                timeit(fx.lookup_batch, q[:sub]) * (nq / sub)
+            rows.append((name, "fixed", p, fx.size_bytes(), t / nq * 1e9))
     write_csv("fig6_lookup", ["dataset", "method", "param", "size_bytes",
                               "ns_per_lookup"], rows)
     # headline: space ratio at comparable latency (error=256 vs full)

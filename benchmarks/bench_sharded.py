@@ -1,0 +1,87 @@
+"""Sharded serving: lookup throughput vs shard count, publish latency vs
+dirty-shard fraction.
+
+Measures the two claims ``repro.index.sharded`` makes: (a) reads scale with
+key-partitioned shards because each query only touches its owning shard's
+(smaller) table, and (b) publish cost is proportional to the number of
+*dirty* shards, not the fleet size -- a clean shard's snapshot and epoch are
+untouched.  Results are written as JSON (``out/bench_sharded.json``) via the
+``benchmarks.common`` plumbing, plus the usual ``emit`` headline lines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.datasets import weblogs_like
+from repro.index.sharded import ShardedIndexService
+
+from .common import emit, timeit, write_json
+
+N = 200_000
+NQ = 8192
+ERROR = 64
+SHARD_COUNTS = (1, 2, 4, 8)
+DIRTY_FRACS = (0.0, 0.25, 0.5, 1.0)
+PUBLISH_SHARDS = 8
+INSERTS_PER_DIRTY_SHARD = 256
+
+
+def run(n: int = N, n_queries: int = NQ, error: int = ERROR,
+        shard_counts: tuple[int, ...] = SHARD_COUNTS,
+        dirty_fracs: tuple[float, ...] = DIRTY_FRACS,
+        publish_shards: int = PUBLISH_SHARDS,
+        inserts_per_dirty_shard: int = INSERTS_PER_DIRTY_SHARD,
+        backend: str = "numpy"):
+    rng = np.random.default_rng(2)
+    keys = weblogs_like(n)          # same workload as fig6/fig7 benches
+    q = keys[rng.integers(0, n, size=n_queries)]
+
+    # --- (a) lookup throughput vs shard count ------------------------------
+    throughput = []
+    for d in shard_counts:
+        svc = ShardedIndexService(keys, error, n_shards=d, backend=backend,
+                                  assume_sorted=True)
+        t = timeit(svc.lookup, q)
+        qps = n_queries / t
+        throughput.append({"n_shards": d, "queries_per_s": qps,
+                           "ns_per_query": t / n_queries * 1e9})
+        emit("sharded", f"qps_{d}shards", qps, f"backend={backend}")
+
+    # --- (b) publish latency vs dirty-shard fraction -----------------------
+    publish = []
+    for frac in dirty_fracs:
+        svc = ShardedIndexService(keys, error, n_shards=publish_shards,
+                                  buffer_size=max(2, error // 4),
+                                  backend=backend, assume_sorted=True)
+        n_dirty = int(round(frac * publish_shards))
+        for sid in range(n_dirty):
+            lo = svc.boundaries[sid]
+            hi = (svc.boundaries[sid + 1] if sid + 1 < publish_shards
+                  else keys[-1])
+            cand = rng.uniform(lo, hi, size=inserts_per_dirty_shard)
+            for k in cand:
+                svc.insert(float(k))
+        t0 = time.perf_counter()
+        published = svc.publish()
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        assert len(published) == n_dirty, (len(published), n_dirty)
+        publish.append({"dirty_frac": frac, "dirty_shards": n_dirty,
+                        "publish_ms": dt_ms,
+                        "pending_flushed": inserts_per_dirty_shard * n_dirty})
+        emit("sharded", f"publish_ms_dirty{n_dirty}of{publish_shards}", dt_ms)
+
+    results = {
+        "config": {"n": n, "n_queries": n_queries, "error": error,
+                   "backend": backend, "publish_shards": publish_shards,
+                   "inserts_per_dirty_shard": inserts_per_dirty_shard},
+        "lookup_throughput": throughput,
+        "publish_latency": publish,
+    }
+    write_json("bench_sharded", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

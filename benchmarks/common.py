@@ -1,12 +1,34 @@
-"""Benchmark plumbing: timing + CSV rows."""
+"""Benchmark plumbing: timing + CSV rows + JSON result files."""
 from __future__ import annotations
 
 import csv
+import json
 import pathlib
 import time
 from typing import Iterable
 
 OUT_DIR = pathlib.Path(__file__).parent / "out"
+
+
+def _jsonable(obj):
+    """numpy scalars/arrays -> plain Python (json.dumps default hook)."""
+    if hasattr(obj, "item") and getattr(obj, "ndim", 0) == 0:
+        return obj.item()
+    if hasattr(obj, "tolist"):
+        return obj.tolist()
+    raise TypeError(f"not JSON serializable: {type(obj).__name__}")
+
+
+def write_json(name: str, obj, path: pathlib.Path | str | None = None
+               ) -> pathlib.Path:
+    """Write a benchmark result object as JSON (default: out/<name>.json)."""
+    if path is None:
+        OUT_DIR.mkdir(exist_ok=True)
+        path = OUT_DIR / f"{name}.json"
+    path = pathlib.Path(path)
+    path.write_text(json.dumps(obj, indent=2, sort_keys=True,
+                               default=_jsonable) + "\n")
+    return path
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:

@@ -36,7 +36,6 @@ DRYRUN = pathlib.Path("experiments/dryrun")
 
 def _model_flops_and_traffic(arch: str, shape: str, chips: int,
                              temp_dev: float, arg_dev: float):
-    import jax
     from repro.configs import SHAPES, get_config
     from repro.models.model import active_param_count, param_count
 

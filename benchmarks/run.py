@@ -21,6 +21,7 @@ MODULES = [
     "bench_fillfactor",     # Fig 12
     "bench_breakdown",      # Fig 13
     "bench_kernel",         # Pallas lookup kernel
+    "bench_sharded",        # sharded serving: qps vs shards, publish latency
 ]
 
 

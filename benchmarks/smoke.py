@@ -1,0 +1,53 @@
+"""CI benchmark smoke: tiny-input runs of the lookup, insert, and sharded
+benches, collected into one JSON artifact (``BENCH_smoke.json``).
+
+Not a performance measurement -- inputs are deliberately small so the job
+finishes in minutes on a CI runner.  The point is (a) the benchmark code
+paths stay runnable on every PR and (b) the artifact gives a coarse
+per-commit perf trajectory (same tiny workload, same schema) that can be
+diffed across workflow runs.
+
+    PYTHONPATH=src python -m benchmarks.smoke --out BENCH_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import platform
+import time
+
+from . import bench_insert, bench_lookup, bench_sharded
+from .common import write_json
+
+TINY = {
+    "lookup": (bench_lookup.run,
+               dict(n=20_000, nq=2_000, errors=[64, 256], pages=[64, 256])),
+    "insert": (bench_insert.run,
+               dict(n=20_000, n_ins=2_000, errors=[64, 256])),
+    "sharded": (bench_sharded.run,
+                dict(n=20_000, n_queries=1_024, shard_counts=(1, 2, 4),
+                     dirty_fracs=(0.0, 0.5, 1.0), publish_shards=4,
+                     inserts_per_dirty_shard=64)),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_smoke.json")
+    args = ap.parse_args()
+
+    report = {"python": platform.python_version(),
+              "machine": platform.machine(), "benches": {}}
+    for name, (fn, kwargs) in TINY.items():
+        t0 = time.perf_counter()
+        results = fn(**kwargs)
+        report["benches"][name] = {
+            "seconds": time.perf_counter() - t0,
+            "params": kwargs,
+            "results": results,
+        }
+    path = write_json("bench_smoke", report, path=args.out)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,39 @@
 """Serving the paper's index through the unified core (repro.index):
 
   * one `SegmentTable`, every engine backend (numpy / xla-window / xla-bisect
-    / pallas) checked against the oracle and timed;
+    / pallas / dispatch) checked against the oracle and timed;
   * the epoch write path: buffered inserts -> publish() -> atomic snapshot
     swap, after which every backend serves the new keys;
+  * the sharded service: N key-partitioned writers with per-shard epoch
+    streams -- insert into some shards, publish, and watch only the dirty
+    shards' epochs advance while the rest keep serving their old snapshot;
   * optionally the distributed range-partitioned variant (run under 8 fake
     devices to see the collectives):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/serve_index.py --distributed
+
+Shard-partitioning knobs (`ShardedIndexService`):
+  * ``n_shards`` (CLI ``--shards``) -- equal-count contiguous key ranges; the
+    replicated boundary router (first key per shard) is the paper's structure
+    recursed once.  More shards = smaller per-shard tables and finer publish
+    granularity, at the cost of more snapshots to manage.
+  * ``buffer_size`` -- per-segment Alg. 4 insert buffer inside each shard's
+    writer; the user-visible error bound still holds (err_seg = error -
+    buffer_size).
+  * ``publish_every`` -- auto-publish cadence: after this many buffered
+    inserts (service-wide) the dirty shards republish.  ``publish()`` is
+    always safe to call unconditionally: clean shards are skipped, and a
+    fully clean service is a no-op.
+
+Backend-dispatch knobs (``backend="dispatch"``, see
+``repro.index.engine.DispatchEngine``):
+  * ``small_max`` -- batches up to this size stay on the host (``numpy``):
+    no device round trip for tiny point probes.
+  * ``large_min`` -- batches at least this size take the Pallas plan/
+    bucketing kernel (``pallas``); in between, the XLA bisect path wins.
+  * per-tier engines are overridable (``small=``/``medium=``/``large=``) and
+    receive ``engine_opts[backend]`` kwargs, e.g. the Pallas bucket capacity.
 """
 import argparse
 import time
@@ -19,7 +44,7 @@ import numpy as np
 
 from repro.index import SegmentTable, available_backends, make_engine
 from repro.kernels.ref import lookup_ref
-from repro.serve import IndexService
+from repro.serve import IndexService, ShardedIndexService
 
 
 def main():
@@ -28,6 +53,7 @@ def main():
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--error", type=int, default=64)
     ap.add_argument("--inserts", type=int, default=2000)
+    ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
 
@@ -66,6 +92,35 @@ def main():
     print(f"  publish: epoch {snap.epoch}, {args.inserts} inserts, "
           f"{snap.n_refit} segments re-fit, {dt*1e3:.1f} ms; "
           f"serving swapped atomically")
+
+    # --- sharded serving: per-shard epoch streams, batch-size dispatch
+    sharded = ShardedIndexService(keys, args.error, n_shards=args.shards,
+                                  buffer_size=args.error // 2,
+                                  backend="dispatch")
+    fresh2 = np.setdiff1d(
+        rng.choice(2 ** 23, size=4 * args.inserts, replace=False).astype(
+            np.float64), np.concatenate([keys, fresh]))
+    # write only into the first and last shard (half the inserts each)
+    if args.shards > 1:
+        half = max(1, args.inserts // 2)
+        lo_hi = np.concatenate([
+            fresh2[fresh2 < sharded.boundaries[1]][:half],
+            fresh2[fresh2 >= sharded.boundaries[-1]][:half]])
+    else:
+        lo_hi = fresh2[: args.inserts]
+    for k in lo_hi:
+        sharded.insert(float(k))
+    t0 = time.perf_counter()
+    published = sharded.publish()
+    dt = time.perf_counter() - t0
+    epochs = sharded.epochs()
+    assert np.all(sharded.lookup(lo_hi) >= 0)
+    print(f"  sharded: {args.shards} shards, {lo_hi.size} inserts into "
+          f"shards {sorted(published)}; publish {dt*1e3:.1f} ms touched "
+          f"only those (epochs now {epochs})")
+    for s in sharded.stats():
+        print(f"    shard {s.shard}: epoch {s.epoch}, {s.n_segments} segs, "
+              f"{s.n_keys} keys, {s.pending_inserts} pending")
 
     if args.distributed:
         from repro.core.distributed import build_sharded_index, lookup_allgather

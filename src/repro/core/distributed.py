@@ -27,6 +27,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
+from repro.index.sharded import pack_shard_tables
 from repro.index.table import build_shard_tables
 
 from .jax_index import DeviceIndex, lookup
@@ -48,29 +49,19 @@ def build_sharded_index(keys: np.ndarray, error: int, n_shards: int,
     n = keys.shape[0]
     m = n // n_shards
     # equal shards; tail handled by caller.  One canonical SegmentTable per
-    # shard (local ranks) -- the same construction every other layer uses.
+    # shard (local ranks) -- the same construction every other layer uses --
+    # padded into the rectangular device layout by the shared bridge.
     tables = build_shard_tables(keys, error, n_shards)
     shards = keys[: m * n_shards].reshape(n_shards, m)
-    s_max = max(t.n_segments for t in tables)
-
-    def pad(a, fill, dtype):
-        out = np.full((n_shards, s_max), fill, dtype)
-        for d, t in enumerate(tables):
-            out[d, : t.n_segments] = a(t)
-        return out
-
-    seg_start = pad(lambda t: t.start_key, np.inf, np.float64)
-    slope = pad(lambda t: t.slope, 0.0, np.float64)
-    base = pad(lambda t: t.base, m, np.int64)
-    seg_end = pad(lambda t: t.seg_end, m, np.int64)
+    packed = pack_shard_tables(tables)
 
     arrays = dict(
-        seg_start=jnp.asarray(seg_start, jnp.float32),
-        slope=jnp.asarray(slope, jnp.float32),
-        base=jnp.asarray(base, jnp.int32),
-        seg_end=jnp.asarray(seg_end, jnp.int32),
+        seg_start=jnp.asarray(packed.seg_start, jnp.float32),
+        slope=jnp.asarray(packed.slope, jnp.float32),
+        base=jnp.asarray(packed.base, jnp.int32),
+        seg_end=jnp.asarray(packed.seg_end, jnp.int32),
         keys=jnp.asarray(shards, jnp.float32),
-        boundaries=jnp.asarray(shards[:, 0], jnp.float32),
+        boundaries=jnp.asarray(packed.boundaries, jnp.float32),
     )
     if mesh is not None:
         shard = NamedSharding(mesh, P(axis, None))

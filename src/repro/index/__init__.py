@@ -1,29 +1,38 @@
 """Canonical index core: one segment table, one router, one engine per backend.
 
 Module map (see ROADMAP.md):
-  table.py    -- immutable ``SegmentTable`` + ``route_keys`` (THE router);
+  table.py    -- immutable ``SegmentTable`` + ``route_keys`` (THE router) +
+                 the shard partition (``shard_boundaries``/``shard_partition``);
                  numpy-only, shared by every layer
   engine.py   -- ``LookupEngine`` registry: numpy / xla-window / xla-bisect /
-                 pallas bounded-window search, ``DeviceIndex`` device form
+                 pallas bounded-window search, ``DeviceIndex`` device form,
+                 and ``DispatchEngine`` (batch-size-aware tier routing)
   snapshot.py -- epoch publishing: Alg. 4 inserts -> ``publish()`` ->
                  ``ServingHandle`` atomic swap into serving
+  sharded.py  -- ``ShardedIndexService``: N key-partitioned writers with
+                 per-shard epoch streams; ``pack_shard_tables`` device bridge
 
-``table`` is imported eagerly (pure numpy); the engine/snapshot names are
-resolved lazily (PEP 562) so host-only code -- including the tree's
+``table`` is imported eagerly (pure numpy); the engine/snapshot/sharded names
+are resolved lazily (PEP 562) so host-only code -- including the tree's
 ``from repro.index.table import ...`` -- never pulls in jax.
 """
-from .table import SegmentTable, build_shard_tables, numpy_lookup, route_keys
+from .table import (SegmentTable, build_shard_tables, numpy_lookup,
+                    route_keys, shard_boundaries, shard_partition)
 
 _ENGINE_NAMES = {
-    "DeviceIndex", "LookupEngine", "LookupPlan", "available_backends",
-    "device_index", "make_engine", "make_plan", "pad_keys",
-    "pallas_lookup", "predict_positions", "register_backend", "xla_lookup",
+    "DeviceIndex", "DispatchEngine", "LookupEngine", "LookupPlan",
+    "available_backends", "device_index", "make_engine", "make_plan",
+    "pad_keys", "pallas_lookup", "predict_positions", "register_backend",
+    "xla_lookup",
 }
 _SNAPSHOT_NAMES = {"ServingHandle", "Snapshot", "SnapshotPublisher"}
+_SHARDED_NAMES = {"PackedShardTables", "ShardStats", "ShardedIndexService",
+                  "pack_shard_tables"}
 
 __all__ = [
     "SegmentTable", "build_shard_tables", "numpy_lookup", "route_keys",
-    *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES),
+    "shard_boundaries", "shard_partition",
+    *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
 ]
 
 
@@ -34,4 +43,7 @@ def __getattr__(name):
     if name in _SNAPSHOT_NAMES:
         from . import snapshot
         return getattr(snapshot, name)
+    if name in _SHARDED_NAMES:
+        from . import sharded
+        return getattr(sharded, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

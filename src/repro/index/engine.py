@@ -21,6 +21,7 @@ across that boundary.  ``DeviceIndex`` is the f32 device form of a
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Callable, Literal, NamedTuple, Protocol, runtime_checkable
 
 import jax
@@ -269,3 +270,66 @@ class PallasEngine(_DeviceEngine):
         self.fn = jax.jit(functools.partial(pallas_lookup, self.index,
                                             qcap=qcap, interpret=interpret,
                                             fallback=fallback))
+
+
+@register_backend("dispatch")
+class DispatchEngine:
+    """Batch-size-aware backend dispatch over one snapshot.
+
+    The backends trade fixed cost against per-query cost: numpy wins for tiny
+    probes (no device round trip), the XLA bisect wins for medium batches
+    (log2(2e) gathers amortize the launch), and the Pallas plan/bucketing path
+    wins for large fan-out (compare-reduce over VMEM-resident key blocks).
+    ``DispatchEngine`` routes each ``lookup`` batch to the tier its size puts
+    it in:
+
+        size <= small_max          -> ``small``   (default numpy)
+        small_max < size < large_min -> ``medium`` (default xla-bisect)
+        size >= large_min          -> ``large``    (default pallas)
+
+    Tier engines are built lazily on first use and cached for the lifetime of
+    this engine (i.e. of the snapshot), so a serving handle swap retires them
+    together with the table.  Every tier returns identical ranks for exact-f32
+    workloads (see the module docstring), so dispatch is semantics-preserving.
+    """
+
+    def __init__(self, table: SegmentTable, *, small_max: int = 64,
+                 large_min: int = 4096, small: str = "numpy",
+                 medium: str = "xla-bisect", large: str = "pallas",
+                 engine_opts: dict[str, dict] | None = None):
+        if not 0 <= small_max < large_min:
+            raise ValueError(f"need 0 <= small_max < large_min, got "
+                             f"{small_max=} {large_min=}")
+        for tier in (small, medium, large):
+            if tier == "dispatch":
+                raise ValueError("dispatch cannot delegate to itself")
+        self.table = table
+        self.small_max = int(small_max)
+        self.large_min = int(large_min)
+        self.tiers = {"small": small, "medium": medium, "large": large}
+        self._engine_opts = engine_opts or {}
+        self._engines: dict[str, LookupEngine] = {}
+        self._lock = threading.Lock()
+
+    def backend_for(self, batch_size: int) -> str:
+        """The tier backend a batch of ``batch_size`` queries dispatches to."""
+        if batch_size <= self.small_max:
+            return self.tiers["small"]
+        if batch_size < self.large_min:
+            return self.tiers["medium"]
+        return self.tiers["large"]
+
+    def engine_for(self, batch_size: int) -> LookupEngine:
+        name = self.backend_for(batch_size)
+        eng = self._engines.get(name)
+        if eng is None:
+            with self._lock:           # don't jit the same tier twice
+                eng = self._engines.get(name)
+                if eng is None:
+                    eng = make_engine(self.table, name,
+                                      **self._engine_opts.get(name, {}))
+                    self._engines[name] = eng
+        return eng
+
+    def lookup(self, queries) -> np.ndarray:
+        return self.engine_for(int(np.size(queries))).lookup(queries)

@@ -1,0 +1,252 @@
+"""Publish-aware sharded serving: per-shard epochs over the unified core.
+
+``ShardedIndexService`` owns N key-partitioned ``FITingTree`` writers -- the
+paper's structure recursed once, with the replicated shard-boundary router
+(:func:`repro.index.table.shard_boundaries`) as the top level.  Each shard has
+its *own* write->publish->serve pipeline from ``repro.index.snapshot``:
+
+    shard d:  FITingTree  --publish-->  Snapshot(epoch_d)  --install-->  handle_d
+
+so epochs advance independently.  ``insert`` routes to the owning shard;
+``publish`` re-segments and republishes **only dirty shards** (shards with
+buffered inserts since their last publish), and each shard's ``ServingHandle``
+swaps atomically -- a slow or write-hot shard never blocks reads on the
+others, and a clean shard's epoch number is untouched by its neighbours'
+publishes.
+
+Reads return *global* ranks: shard runs are contiguous in key order, so a
+query's global rank is its local rank plus the summed key counts of the
+preceding shards' current snapshots.  Cross-shard reads are per-shard
+consistent (each lookup pins one shard snapshot); a batch spanning shards may
+observe different shards at different epochs -- exactly the contract the
+per-shard publish cadence buys.
+
+``stats()`` exposes per-shard observability (epoch, segment count, key count,
+pending inserts) for cadence tuning and dashboards.
+
+``pack_shard_tables`` is the shared builder bridge: it pads a list of
+per-shard ``SegmentTable``s into rectangular (D, S_max) metadata arrays, the
+form both the collective-based device path (``repro.core.distributed``) and
+any future multi-host serving tier consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.index.table import SegmentTable, route_keys, shard_partition
+
+from .snapshot import ServingHandle, Snapshot, SnapshotPublisher
+
+
+class PackedShardTables(NamedTuple):
+    """Rectangular (D, S_max) numpy form of D per-shard segment tables.
+
+    Rows are padded so every shard routes correctly in isolation: start keys
+    pad with +inf (never routed to -- searchsorted lands on the last real
+    segment), slopes with 0, and base/seg_end with the shard's own key count
+    (an empty trailing window).
+    """
+    seg_start: np.ndarray   # (D, S_max) f64, +inf padded
+    slope: np.ndarray       # (D, S_max) f64, 0 padded
+    base: np.ndarray        # (D, S_max) i64, n_keys padded
+    seg_end: np.ndarray     # (D, S_max) i64, n_keys padded
+    boundaries: np.ndarray  # (D,) f64 first key per shard (the router)
+    s_max: int
+
+
+def pack_shard_tables(tables: Sequence[SegmentTable]) -> PackedShardTables:
+    """Pad per-shard segment metadata into the rectangular device layout."""
+    d = len(tables)
+    s_max = max(t.n_segments for t in tables)
+    seg_start = np.full((d, s_max), np.inf, np.float64)
+    slope = np.zeros((d, s_max), np.float64)
+    base = np.empty((d, s_max), np.int64)
+    seg_end = np.empty((d, s_max), np.int64)
+    boundaries = np.empty((d,), np.float64)
+    for i, t in enumerate(tables):
+        s = t.n_segments
+        seg_start[i, :s] = t.start_key
+        slope[i, :s] = t.slope
+        base[i, :s] = t.base
+        base[i, s:] = t.n_keys
+        seg_end[i, :s] = t.seg_end
+        seg_end[i, s:] = t.n_keys
+        boundaries[i] = t.keys[0] if t.n_keys else np.inf
+    return PackedShardTables(seg_start, slope, base, seg_end, boundaries, s_max)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardStats:
+    """One shard's observable serving state (a point-in-time sample)."""
+    shard: int            # shard id (position in key order)
+    boundary: float       # first key routed here (shard 0 also takes below)
+    epoch: int            # epoch of the shard's installed snapshot
+    n_segments: int       # segments in the installed snapshot
+    n_keys: int           # keys served by the installed snapshot
+    pending_inserts: int  # inserts buffered since this shard's last publish
+
+
+class ShardedIndexService:
+    """N key-partitioned writable indexes, each with its own epoch stream.
+
+    Construction partitions the (sorted) build keys into equal-count
+    contiguous shards (:func:`shard_partition`; the tail stays in the last
+    shard -- nothing is dropped) and publishes epoch 1 on every shard.  From
+    then on writes and publishes are per-shard:
+
+        svc = ShardedIndexService(keys, error=64, n_shards=8, buffer_size=16)
+        svc.insert(k)          # routed to the owning shard, buffered (Alg. 4)
+        svc.publish()          # republishes ONLY dirty shards; clean shards
+                               # keep their snapshot and epoch number
+        svc.lookup(q)          # global ranks, any engine backend
+
+    ``backend`` may be any registered engine, including ``"dispatch"`` (the
+    batch-size-aware tier router in ``repro.index.engine``).
+    """
+
+    def __init__(self, keys: np.ndarray, error: int, *, n_shards: int = 4,
+                 buffer_size: int = 0, payload: np.ndarray | None = None,
+                 mode: str = "paper", backend: str = "numpy",
+                 engine_opts: dict[str, dict] | None = None,
+                 publish_every: int | None = None,
+                 assume_sorted: bool = False):
+        # lazy: repro.core.tree imports repro.index.table at module level
+        from repro.core.tree import FITingTree
+
+        if publish_every is not None and buffer_size == 0:
+            raise ValueError("publish_every requires buffer_size > 0 "
+                             "(a read-only service never republishes)")
+        keys = np.asarray(keys, np.float64)
+        if not assume_sorted:
+            order = np.argsort(keys, kind="stable")
+            keys = keys[order]
+            if payload is not None:
+                payload = np.asarray(payload)[order]
+
+        self.error = int(error)
+        self.buffer_size = int(buffer_size)
+        self.default_backend = backend
+        self.publish_every = publish_every
+        self.has_payload = payload is not None
+
+        self.boundaries, splits = shard_partition(keys, n_shards)
+        offsets = np.concatenate(
+            [[0], np.cumsum([s.shape[0] for s in splits])[:-1]]).astype(np.int64)
+        self.writers = [
+            FITingTree(split, error=error, buffer_size=buffer_size, mode=mode,
+                       payload=(None if payload is None else
+                                payload[offsets[d]:offsets[d] + split.shape[0]]),
+                       assume_sorted=True)
+            for d, split in enumerate(splits)]
+        self.publishers = [SnapshotPublisher(t) for t in self.writers]
+        self.handles = [ServingHandle(engine_opts) for _ in self.writers]
+        self._pending = [0] * n_shards
+        for pub, handle in zip(self.publishers, self.handles):
+            handle.install(pub.publish())     # epoch 1 everywhere
+
+    # ------------------------------------------------------------------ shape
+    @property
+    def n_shards(self) -> int:
+        return len(self.writers)
+
+    @property
+    def pending_inserts(self) -> int:
+        """Total inserts buffered across shards since their last publishes."""
+        return sum(self._pending)
+
+    def shard_of(self, key: float) -> int:
+        """The shard owning ``key`` (route through the boundary router)."""
+        return int(route_keys(self.boundaries, np.float64(key)))
+
+    def epochs(self) -> list[int]:
+        """Current epoch per shard (independent streams)."""
+        return [h.epoch for h in self.handles]
+
+    def stats(self) -> list[ShardStats]:
+        """Per-shard observability sample: epoch, size, pending writes."""
+        out = []
+        for d, (handle, pend) in enumerate(zip(self.handles, self._pending)):
+            snap = handle.current()
+            out.append(ShardStats(
+                shard=d, boundary=float(self.boundaries[d]), epoch=snap.epoch,
+                n_segments=snap.table.n_segments, n_keys=snap.n_keys,
+                pending_inserts=pend))
+        return out
+
+    # ------------------------------------------------------------- write path
+    def insert(self, key: float, value=None) -> None:
+        """Buffer an insert in the owning shard (Alg. 4).  Invisible to
+        lookups until that shard publishes."""
+        if self.buffer_size == 0:
+            raise ValueError("service built read-only; pass buffer_size > 0 "
+                             "to enable inserts")
+        if value is not None and not self.has_payload:
+            raise ValueError("service built without payloads (clustered "
+                             "index); pass payload= at construction to store "
+                             "values")
+        sid = self.shard_of(key)
+        self.writers[sid].insert(key, value)
+        self._pending[sid] += 1
+        if self.publish_every is not None and \
+                self.pending_inserts >= self.publish_every:
+            self.publish()
+
+    def _shard_dirty(self, sid: int) -> bool:
+        """Unpublished writes on shard ``sid``: service-routed inserts,
+        direct writer inserts still in Alg. 4 buffers, or direct inserts
+        already merged into pages (visible as a key-count drift between the
+        writer and the installed snapshot)."""
+        return (self._pending[sid] > 0
+                or bool(self.writers[sid].dirty_segments())
+                or self.writers[sid].n_keys != self.handles[sid].current().n_keys)
+
+    def publish(self, shards: Sequence[int] | None = None,
+                force: bool = False) -> dict[int, Snapshot]:
+        """Cut a new epoch on every dirty shard; leave clean shards untouched.
+
+        A shard is dirty when it has unpublished writes -- whether routed
+        through :meth:`insert` or applied directly to its ``FITingTree``
+        writer.  Pass ``shards`` to restrict the sweep, ``force=True`` to
+        republish clean shards too (cadence-loop safe either way: with
+        nothing dirty this is a no-op returning ``{}``).  Returns the newly
+        installed snapshots keyed by shard id.
+        """
+        targets = range(self.n_shards) if shards is None else shards
+        published: dict[int, Snapshot] = {}
+        for sid in targets:
+            if not force and not self._shard_dirty(sid):
+                continue
+            snap = self.publishers[sid].publish()
+            self.handles[sid].install(snap)
+            self._pending[sid] = 0
+            published[sid] = snap
+        return published
+
+    # -------------------------------------------------------------- read path
+    def lookup(self, queries, backend: str | None = None) -> np.ndarray:
+        """Global rank of each query across the current shard snapshots, -1
+        if absent.  Queries are routed to their owning shard and answered by
+        that shard's engine; local ranks are lifted to global ranks with the
+        preceding shards' snapshot key counts.
+
+        All shard engines are pinned up front, so the offsets and the answers
+        come from one self-consistent set of snapshots even if a publish
+        lands mid-batch (engines are cached per snapshot per backend inside
+        each handle, so pinning is an O(1) dict hit after the first call)."""
+        backend = backend or self.default_backend
+        if self.n_shards == 1:                      # the IndexService path
+            return self.handles[0].lookup(queries, backend)
+        engines = [h.engine(backend) for h in self.handles]
+        q = np.asarray(queries, np.float64)
+        sid = route_keys(self.boundaries, q)
+        sizes = [e.table.n_keys for e in engines]
+        offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+        out = np.full(q.shape, -1, np.int64)
+        for d in np.unique(sid):
+            mask = sid == d
+            local = np.asarray(engines[d].lookup(q[mask]), np.int64)
+            out[mask] = np.where(local >= 0, local + offsets[d], -1)
+        return out

@@ -169,11 +169,46 @@ def numpy_lookup(table: SegmentTable, queries) -> np.ndarray:
     return np.where(ok, lo, -1).astype(np.int64)
 
 
+def shard_boundaries(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Equal-count cut points: the first key owned by each shard.
+
+    These are the replicated top-level router of the sharded index -- the
+    paper's structure recursed once.  Routing a query through them with
+    :func:`route_keys` names its owning shard; queries below the first cut
+    clamp to shard 0, so the partition is total over the key space."""
+    keys = np.asarray(keys, np.float64)
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    if keys.shape[0] < n_shards:
+        raise ValueError(f"cannot cut {keys.shape[0]} keys into "
+                         f"{n_shards} non-empty shards")
+    m = keys.shape[0] // n_shards
+    return keys[np.arange(n_shards) * m].copy()
+
+
+def shard_partition(keys: np.ndarray, n_shards: int
+                    ) -> tuple[np.ndarray, list[np.ndarray]]:
+    """Range-partition sorted ``keys`` into ``n_shards`` contiguous runs.
+
+    Returns ``(boundaries, splits)`` where ``boundaries`` are the
+    :func:`shard_boundaries` cuts and ``splits[d]`` is shard d's key run.
+    Unlike :func:`build_shard_tables` nothing is dropped: the tail beyond the
+    equal-count cut lands in the last shard, so ``concat(splits) == keys``
+    and a shard's global rank offset is the summed length of its
+    predecessors."""
+    keys = np.asarray(keys, np.float64)
+    bounds = shard_boundaries(keys, n_shards)
+    m = keys.shape[0] // n_shards
+    cuts = (np.arange(1, n_shards) * m).tolist()
+    return bounds, np.split(keys, cuts)
+
+
 def build_shard_tables(keys: np.ndarray, error: int, n_shards: int,
                        mode: "Mode" = "paper") -> list[SegmentTable]:
     """Equal-count contiguous range partition: one independent SegmentTable per
     shard (local ranks).  The tail beyond ``n_shards * (n // n_shards)`` is
-    dropped, as in the original sharded builder (callers handle it)."""
+    dropped, as in the original sharded builder (callers handle it); the
+    serving-side partition that keeps every key is :func:`shard_partition`."""
     keys = np.asarray(keys, np.float64)
     m = keys.shape[0] // n_shards
     shards = keys[: m * n_shards].reshape(n_shards, m)

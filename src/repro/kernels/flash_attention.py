@@ -15,7 +15,6 @@ Oracle: kernels/ref.attention_ref.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ Usage:
 import argparse
 import json
 import pathlib
-import re
 import time
 import traceback
 

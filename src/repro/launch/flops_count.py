@@ -11,7 +11,6 @@ SRoofline is exactly the remat/redundancy waste measure the brief asks for.
 from __future__ import annotations
 
 import numpy as np
-from jax import core
 
 
 def _dot_flops(eqn) -> float:

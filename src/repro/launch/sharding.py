@@ -14,7 +14,6 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.config import ModelConfig
 
 FSDP, TP = "data", "model"
 

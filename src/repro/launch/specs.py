@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import SHAPES, ShapeSpec, get_config, shape_applicable
+from repro.configs import SHAPES, ShapeSpec, get_config
 from repro.models import init_caches, init_params
 from repro.models.config import ModelConfig
 from repro.launch import sharding as sh

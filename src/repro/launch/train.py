@@ -25,12 +25,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import manager as ckpt
 from repro.configs import get_config, reduced
-from repro.data.pipeline import Corpus, DataPipeline, PipelineConfig, \
-    synthetic_corpus
+from repro.data.pipeline import DataPipeline, PipelineConfig, synthetic_corpus
 from repro.launch import sharding as sh
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params

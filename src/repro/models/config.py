@@ -20,7 +20,6 @@ otherwise (moe replaces the ffn; xlstm blocks have no separate ffn).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence
 
 

@@ -13,13 +13,12 @@ activations at the embed output, each scan-body entry, and the final hidden.
 """
 from __future__ import annotations
 
-import contextlib
 import functools
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from . import blocks
 from .blocks import Ctx

@@ -1,4 +1,6 @@
 """Serving steps, paged KV cache, batching, and index snapshot serving."""
+from repro.index.sharded import ShardedIndexService, ShardStats
+
 from .index_service import IndexService
 
-__all__ = ["IndexService"]
+__all__ = ["IndexService", "ShardedIndexService", "ShardStats"]

@@ -11,13 +11,20 @@ consistent view.
     svc.lookup(q)            # epoch 1 (built at construction)
     svc.insert(k); ...       # buffered; serving unaffected
     svc.publish()            # epoch 2: inserts now visible to every backend
+
+``IndexService`` is the single-host form: a thin wrapper over a one-shard
+``repro.index.sharded.ShardedIndexService`` (the N-shard generalization with
+per-shard epochs lives there; re-exported by ``repro.serve``).  ``publish``
+with zero pending inserts is a **no-op** returning the current snapshot --
+periodic publish-cadence loops need no guard logic and idle ticks don't churn
+epoch numbers or engine caches.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.tree import FITingTree
-from repro.index.snapshot import ServingHandle, Snapshot, SnapshotPublisher
+from repro.index.sharded import ShardedIndexService
+from repro.index.snapshot import Snapshot
 
 
 class IndexService:
@@ -28,44 +35,52 @@ class IndexService:
                  backend: str = "numpy",
                  engine_opts: dict[str, dict] | None = None,
                  publish_every: int | None = None):
-        if publish_every is not None and buffer_size == 0:
-            raise ValueError("publish_every requires buffer_size > 0 "
-                             "(a read-only service never republishes)")
-        self.tree = FITingTree(keys, error=error, buffer_size=buffer_size,
-                               mode=mode, payload=payload)
-        self.default_backend = backend
-        self.publisher = SnapshotPublisher(self.tree)
-        self.handle = ServingHandle(engine_opts)
-        self.publish_every = publish_every
-        self._pending = 0
-        self.handle.install(self.publisher.publish())
+        self._sharded = ShardedIndexService(
+            keys, error, n_shards=1, buffer_size=buffer_size, payload=payload,
+            mode=mode, backend=backend, engine_opts=engine_opts,
+            publish_every=publish_every)
+
+    # ----------------------------------------------------- one-shard plumbing
+    @property
+    def tree(self):
+        """The single shard's mutable FITingTree writer."""
+        return self._sharded.writers[0]
+
+    @property
+    def publisher(self):
+        return self._sharded.publishers[0]
+
+    @property
+    def handle(self):
+        return self._sharded.handles[0]
+
+    @property
+    def default_backend(self) -> str:
+        return self._sharded.default_backend
+
+    @property
+    def publish_every(self) -> int | None:
+        return self._sharded.publish_every
 
     # ------------------------------------------------------------- write path
     def insert(self, key: float, value=None) -> None:
-        """Buffer an insert (Alg. 4).  Not visible to lookups until publish."""
-        if self.tree.buffer_size == 0:
-            raise ValueError("IndexService built read-only; pass "
-                             "buffer_size > 0 to enable inserts")
-        if value is not None and self.tree.payloads is None:
-            raise ValueError("IndexService built without payloads (clustered "
-                             "index); pass payload= at construction to store "
-                             "values")
-        self.tree.insert(key, value)
-        self._pending += 1
-        if self.publish_every is not None and self._pending >= self.publish_every:
-            self.publish()
+        """Buffer an insert (Alg. 4).  Not visible to lookups until publish.
+        Read-only / no-payload misuse is rejected by the underlying service."""
+        self._sharded.insert(key, value)
 
     def publish(self) -> Snapshot:
-        """Cut a new epoch and swap it into serving atomically."""
-        snap = self.publisher.publish()
-        self.handle.install(snap)
-        self._pending = 0
-        return snap
+        """Cut a new epoch and swap it into serving atomically.
+
+        With zero pending inserts this is a no-op: the installed snapshot is
+        returned unchanged (same epoch), so cadence loops can call it
+        unconditionally."""
+        published = self._sharded.publish()
+        return published.get(0, self.handle.current())
 
     # -------------------------------------------------------------- read path
     def lookup(self, queries, backend: str | None = None) -> np.ndarray:
         """Rank of each query in the current epoch's key column, -1 if absent."""
-        return self.handle.lookup(queries, backend or self.default_backend)
+        return self._sharded.lookup(queries, backend)
 
     @property
     def epoch(self) -> int:
@@ -74,4 +89,4 @@ class IndexService:
     @property
     def pending_inserts(self) -> int:
         """Inserts buffered since the last publish (invisible to serving)."""
-        return self._pending
+        return self._sharded.pending_inserts

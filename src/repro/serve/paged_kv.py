@@ -14,7 +14,6 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.segmentation import Segments, shrinking_cone
 
 
 @dataclasses.dataclass
@@ -71,7 +70,6 @@ class CompressedBlockTable:
 
     def __init__(self, table: list[int]):
         self.n = len(table)
-        t = np.asarray(table, np.float64)
         # index the (logical, physical) pairs: key = logical id, position =
         # physical id. Monotone runs compress; error=1 keeps probes exact
         # after rounding since physical ids are integers.

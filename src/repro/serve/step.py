@@ -1,7 +1,6 @@
 """Serve steps: prefill (last-token logits) and greedy decode, cache-threaded."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models import decode_step, prefill

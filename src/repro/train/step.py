@@ -6,12 +6,8 @@ compression wraps the cross-pod reduction (train/compress.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models import loss_fn
 from repro.models.config import ModelConfig

@@ -1,5 +1,4 @@
 """Sec. 6 cost model: monotonicity, pessimism, and the two choosers."""
-import numpy as np
 
 from repro.core import (CostParams, FITingTree, TPUCostParams,
                         choose_error_for_latency, choose_error_for_space,

@@ -178,3 +178,101 @@ def test_table_window_contains_every_key():
     true = np.arange(keys.shape[0])
     assert np.all((lo <= true) & (true < hi))
     assert table.max_abs_error() <= table.error + 1e-6
+
+
+# ----------------------------------------------------------- dispatch engine
+def test_dispatch_tier_selection_at_breakpoints():
+    """backend_for is exact at both breakpoints (inclusive small_max,
+    inclusive large_min)."""
+    from repro.index import DispatchEngine
+    table = SegmentTable.from_keys(_distinct_keys(512), 16, assume_sorted=True)
+    eng = make_engine(table, "dispatch", small_max=8, large_min=64)
+    assert isinstance(eng, DispatchEngine)
+    assert eng.backend_for(0) == "numpy"
+    assert eng.backend_for(8) == "numpy"          # == small_max: small tier
+    assert eng.backend_for(9) == "xla-bisect"     # first medium size
+    assert eng.backend_for(63) == "xla-bisect"    # last medium size
+    assert eng.backend_for(64) == "pallas"        # == large_min: large tier
+    assert eng.backend_for(10 ** 9) == "pallas"
+
+
+def test_dispatch_agrees_with_numpy_oracle_at_every_breakpoint():
+    """Acceptance: the dispatch path returns the numpy-oracle ranks for batch
+    sizes straddling both tier boundaries (so every tier engine is exercised
+    and agrees)."""
+    keys = _distinct_keys(3000, seed=20)
+    table = SegmentTable.from_keys(keys, 32, assume_sorted=True)
+    eng = make_engine(table, "dispatch", small_max=8, large_min=32)
+    oracle = make_engine(table, "numpy")
+    rng = np.random.default_rng(21)
+    pool = np.concatenate([keys[rng.integers(0, keys.shape[0], 64)],
+                           rng.uniform(0, 2 ** 23, size=64)])
+    for size in (1, 7, 8, 9, 31, 32, 64):
+        q = pool[rng.integers(0, pool.shape[0], size)]
+        assert eng.engine_for(size).backend == eng.backend_for(size)
+        np.testing.assert_array_equal(
+            np.asarray(eng.lookup(q)), oracle.lookup(q),
+            err_msg=f"batch size {size} -> {eng.backend_for(size)}")
+
+
+def test_dispatch_rejects_bad_config():
+    table = SegmentTable.from_keys(np.arange(64.0), 8, assume_sorted=True)
+    with pytest.raises(ValueError, match="small_max"):
+        make_engine(table, "dispatch", small_max=100, large_min=10)
+    with pytest.raises(ValueError, match="delegate to itself"):
+        make_engine(table, "dispatch", small="dispatch")
+
+
+# ------------------------------------------------------------ sharded service
+def test_sharded_round_trip_all_backends_per_shard_epochs():
+    """Acceptance: build sharded -> insert keys spanning >= 2 shards ->
+    publish -> every registered backend returns the inserted keys, while an
+    untouched shard's epoch number is unchanged."""
+    from repro.index import ShardedIndexService
+    keys = _distinct_keys(8000, seed=30)
+    svc = ShardedIndexService(keys, error=64, n_shards=4, buffer_size=16,
+                              assume_sorted=True)
+    assert svc.epochs() == [1, 1, 1, 1]
+
+    rng = np.random.default_rng(31)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=4000, replace=False).astype(np.float64), keys)
+    into0 = fresh[fresh < svc.boundaries[1]][:40]       # shard 0
+    into3 = fresh[fresh >= svc.boundaries[3]][:40]      # shard 3
+    assert into0.size == 40 and into3.size == 40
+    new = np.concatenate([into0, into3])
+    for k in new:
+        svc.insert(float(k))
+    assert np.all(svc.lookup(new) == -1)                # not yet published
+
+    published = svc.publish()
+    assert sorted(published) == [0, 3]                  # only dirty shards
+    assert svc.epochs() == [2, 1, 1, 2]                 # shards 1,2 untouched
+
+    union = np.sort(np.concatenate([keys, new]))
+    q = np.concatenate([new, keys[::113], fresh[2000:2032]])
+    want = _oracle(union, q)
+    for backend in (*ALL_BACKENDS, "dispatch"):
+        got = svc.lookup(q, backend)
+        np.testing.assert_array_equal(got, want, err_msg=backend)
+        assert np.all(svc.lookup(new, backend) >= 0), backend
+
+
+def test_sharded_global_ranks_survive_uneven_growth():
+    """After shards grow by different amounts, the rank offsets must track
+    the per-shard snapshot sizes, keeping global ranks == union searchsorted."""
+    from repro.index import ShardedIndexService
+    keys = _distinct_keys(6000, seed=32)
+    svc = ShardedIndexService(keys, error=64, n_shards=3, buffer_size=32,
+                              assume_sorted=True)
+    rng = np.random.default_rng(33)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=6000, replace=False).astype(np.float64), keys)
+    grow0 = fresh[fresh < svc.boundaries[1]][:90]       # shard 0 grows a lot
+    grow2 = fresh[fresh >= svc.boundaries[2]][:10]      # shard 2 a little
+    for k in np.concatenate([grow0, grow2]):
+        svc.insert(float(k))
+    svc.publish()
+    union = np.sort(np.concatenate([keys, grow0, grow2]))
+    q = np.concatenate([grow0[::7], grow2, keys[::211]])
+    np.testing.assert_array_equal(svc.lookup(q), _oracle(union, q))

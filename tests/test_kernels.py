@@ -2,7 +2,6 @@
 
 Sweeps shapes / errors / distributions / duplicates / overflow, per the brief.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

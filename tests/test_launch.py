@@ -1,13 +1,9 @@
 """Launch-layer units: sharding rules, input specs, HLO analysis parsing."""
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
-from repro.launch.hlo_analysis import (analyze_collectives, shape_bytes,
-                                       split_computations)
+from repro.launch.hlo_analysis import analyze_collectives, shape_bytes
 from repro.launch.sharding import batch_spec, cache_spec, param_spec
 from repro.launch.specs import input_specs
 

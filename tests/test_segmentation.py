@@ -1,6 +1,5 @@
 """Segmentation invariants: Alg. 1 / Alg. 2 / Theorem 3.1 / Sec. 3.4 bound."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (max_segments_bound, optimal_segmentation, shrinking_cone,

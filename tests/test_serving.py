@@ -1,7 +1,6 @@
-"""Serving substrate: paged KV allocator, compressed block tables, and the
-continuous batcher (greedy decode == single-request reference)."""
-import dataclasses
-
+"""Serving substrate: paged KV allocator, compressed block tables, the
+continuous batcher (greedy decode == single-request reference), and the
+sharded index service (per-shard epochs, publish routing, no-op publish)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,6 +8,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import decode_step, init_caches, init_params, prefill
+from repro.serve import IndexService, ShardedIndexService
 from repro.serve.batcher import ContinuousBatcher, Request
 from repro.serve.paged_kv import (CompressedBlockTable, PagedKVCache,
                                   compressed_table)
@@ -82,3 +82,131 @@ def test_continuous_batcher_matches_sequential():
     assert ticks < 60
     for req in b.completed:
         assert req.out == reference(prompts[req.rid]), req.rid
+
+
+# ------------------------------------------------------------ sharded index
+def _index_keys(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.choice(2 ** 23, size=n, replace=False)).astype(np.float64)
+
+
+def test_inserts_land_in_owning_shard():
+    keys = _index_keys(8000, seed=40)
+    svc = ShardedIndexService(keys, error=64, n_shards=4, buffer_size=32,
+                              assume_sorted=True)
+    rng = np.random.default_rng(41)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=4000, replace=False).astype(np.float64), keys)
+    picks = fresh[:: fresh.shape[0] // 60][:60]
+    for k in picks:
+        sid = svc.shard_of(float(k))
+        svc.insert(float(k))
+        # the owning shard's buffered-key set gained exactly this key
+        assert any(k in b for b in svc.writers[sid].buffers), (k, sid)
+        for other in range(svc.n_shards):
+            if other != sid:
+                assert not any(k in b for b in svc.writers[other].buffers)
+    stats = svc.stats()
+    assert sum(s.pending_inserts for s in stats) == picks.size
+    # pending counters match the per-shard routing of the picks
+    want = np.bincount([svc.shard_of(float(k)) for k in picks], minlength=4)
+    assert [s.pending_inserts for s in stats] == want.tolist()
+
+
+def test_publish_one_dirty_shard_leaves_other_epochs_untouched():
+    keys = _index_keys(6000, seed=42)
+    svc = ShardedIndexService(keys, error=64, n_shards=3, buffer_size=16,
+                              assume_sorted=True)
+    rng = np.random.default_rng(43)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=3000, replace=False).astype(np.float64), keys)
+    mid = fresh[(fresh >= svc.boundaries[1]) & (fresh < svc.boundaries[2])][:8]
+    for k in mid:
+        svc.insert(float(k))
+    snaps_before = [h.current() for h in svc.handles]
+    published = svc.publish()
+    assert list(published) == [1]
+    assert svc.epochs() == [1, 2, 1]
+    # untouched shards still serve the very same snapshot object
+    assert svc.handles[0].current() is snaps_before[0]
+    assert svc.handles[2].current() is snaps_before[2]
+    assert np.all(svc.lookup(mid) >= 0)
+
+
+def test_sharded_publish_subset_and_force():
+    keys = _index_keys(4000, seed=44)
+    svc = ShardedIndexService(keys, error=64, n_shards=2, buffer_size=16,
+                              assume_sorted=True)
+    assert svc.publish() == {}                      # nothing dirty: no-op
+    assert svc.epochs() == [1, 1]
+    forced = svc.publish(force=True)
+    assert sorted(forced) == [0, 1] and svc.epochs() == [2, 2]
+    rng = np.random.default_rng(45)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=2000, replace=False).astype(np.float64), keys)
+    k0 = fresh[fresh < svc.boundaries[1]][0]
+    svc.insert(float(k0))
+    assert svc.publish(shards=[1]) == {}            # dirty shard excluded
+    assert svc.pending_inserts == 1
+    assert list(svc.publish(shards=[0])) == [0]
+    assert svc.epochs() == [3, 2]
+
+
+def test_index_service_publish_noop_when_clean():
+    """Satellite fix: cadence loops may call publish() unconditionally."""
+    keys = _index_keys(3000, seed=46)
+    svc = IndexService(keys, error=64, buffer_size=16)
+    snap1 = svc.publish()                           # clean: no-op
+    assert svc.epoch == 1 and snap1.epoch == 1
+    assert svc.handle.current() is snap1            # same installed snapshot
+    new_key = float(np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)[0])
+    svc.insert(new_key)
+    assert svc.publish().epoch == 2                 # dirty: real epoch cut
+    assert svc.publish().epoch == 2                 # clean again: no-op
+    assert svc.lookup(np.asarray([new_key]))[0] >= 0
+
+
+def test_sharded_auto_publish_cadence():
+    keys = _index_keys(4000, seed=47)
+    svc = ShardedIndexService(keys, error=64, n_shards=2, buffer_size=32,
+                              publish_every=6, assume_sorted=True)
+    rng = np.random.default_rng(48)
+    fresh = np.setdiff1d(
+        rng.choice(2 ** 23, size=2000, replace=False).astype(np.float64),
+        keys)[:6]
+    for k in fresh:
+        svc.insert(float(k))
+    assert svc.pending_inserts == 0                 # 6th insert triggered
+    assert max(svc.epochs()) >= 2
+    assert np.all(svc.lookup(fresh) >= 0)
+
+
+def test_sharded_read_only_and_payload_guards():
+    keys = _index_keys(2000, seed=49)
+    svc = ShardedIndexService(keys, error=64, n_shards=2, assume_sorted=True)
+    with pytest.raises(ValueError, match="read-only"):
+        svc.insert(1.5)
+    with pytest.raises(ValueError, match="publish_every requires"):
+        ShardedIndexService(keys, error=64, n_shards=2, publish_every=5,
+                            assume_sorted=True)
+    svc2 = ShardedIndexService(keys, error=64, n_shards=2, buffer_size=8,
+                               assume_sorted=True)
+    with pytest.raises(ValueError, match="payload"):
+        svc2.insert(1.5, value=b"x")
+
+
+def test_publish_sees_direct_writer_inserts():
+    """Writes through the public `tree` property (bypassing the service
+    counter) must still mark the shard dirty and be published."""
+    keys = _index_keys(2000, seed=50)
+    svc = IndexService(keys, error=64, buffer_size=8)
+    fresh = np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)
+    k = float(fresh[0])
+    svc.tree.insert(k)
+    assert svc.publish().epoch == 2
+    assert svc.lookup(np.asarray([k]))[0] >= 0
+    burst = fresh[1:9]          # == buffer_size: may merge straight to pages
+    for b in burst:
+        svc.tree.insert(float(b))
+    assert svc.publish().epoch == 3
+    assert np.all(svc.lookup(burst) >= 0)

@@ -12,8 +12,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import manager as ckpt
-from repro.data.pipeline import (Corpus, DataPipeline, DocIndex,
-                                 PipelineConfig, synthetic_corpus)
+from repro.data.pipeline import (DataPipeline, DocIndex, PipelineConfig,
+                                 synthetic_corpus)
 from repro.train.compress import compress_decompress, init_residual
 
 SRC = str(pathlib.Path(__file__).parents[1] / "src")

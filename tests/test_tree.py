@@ -1,6 +1,5 @@
 """FITingTree behaviour: lookups (Alg. 3), inserts (Alg. 4), ranges, router."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import FITingTree, PackedRouter

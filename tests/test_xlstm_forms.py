@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import get_config, reduced
 from repro.models import blocks as BL
-from repro.models.blocks import Ctx, _mlstm_sequential
+from repro.models.blocks import Ctx
 
 
 def _setup(t, seed=0):
