@@ -1,0 +1,118 @@
+"""Adaptive shard rebalancing under a skewed insert stream.
+
+Measures the claim ``ShardedIndexService.rebalance`` makes: under write skew
+(a 10:1 hot key range) a frozen partition lets one shard grow without bound
+-- its publishes get slower and its larger table dominates lookup cost --
+while adaptive recutting keeps keys-per-shard near-even at the price of
+occasional migration work.  Two identical services consume the same skewed
+stream, one with rebalancing off and one recutting whenever the skew
+threshold trips; we record publish latency along the stream (mean/p95/max,
+with rebalance time accounted separately so the comparison is honest),
+end-state lookup throughput, and the final keys-per-shard imbalance.
+
+Results are written as JSON (``out/bench_rebalance.json``) via the
+``benchmarks.common`` plumbing, plus the usual ``emit`` headline lines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.datasets import weblogs_like
+from repro.index.sharded import ShardedIndexService
+
+from .common import emit, timeit, write_json
+
+N = 100_000
+N_INSERTS = 20_000
+NQ = 4096
+ERROR = 64
+N_SHARDS = 8
+SKEW = 10.0
+PUBLISH_EVERY = 512
+SKEW_THRESHOLD = 1.5
+
+
+def _skewed_stream(rng: np.random.Generator, n: int, hot_lo: float,
+                   hot_hi: float, lo: float, hi: float, skew: float
+                   ) -> np.ndarray:
+    """Insert stream where a key is ``skew``x more likely to land in the hot
+    range [hot_lo, hot_hi) than anywhere in [lo, hi)."""
+    hot = rng.random(n) < skew / (skew + 1.0)
+    return np.where(hot, rng.uniform(hot_lo, hot_hi, size=n),
+                    rng.uniform(lo, hi, size=n))
+
+
+def _percentile(xs: list[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def run(n: int = N, n_inserts: int = N_INSERTS, n_queries: int = NQ,
+        error: int = ERROR, n_shards: int = N_SHARDS, skew: float = SKEW,
+        publish_every: int = PUBLISH_EVERY,
+        skew_threshold: float = SKEW_THRESHOLD, backend: str = "numpy"):
+    keys = weblogs_like(n)
+    results = {"config": {"n": n, "n_inserts": n_inserts,
+                          "n_queries": n_queries, "error": error,
+                          "n_shards": n_shards, "skew": skew,
+                          "publish_every": publish_every,
+                          "skew_threshold": skew_threshold,
+                          "backend": backend}}
+    for mode in ("off", "on"):
+        rng = np.random.default_rng(7)          # same stream both modes
+        svc = ShardedIndexService(keys, error, n_shards=n_shards,
+                                  buffer_size=max(2, error // 4),
+                                  backend=backend,
+                                  skew_threshold=skew_threshold,
+                                  assume_sorted=True)
+        hot_lo, hot_hi = float(svc.boundaries[0]), float(svc.boundaries[1])
+        stream = _skewed_stream(rng, n_inserts, hot_lo, hot_hi,
+                                float(keys[0]), float(keys[-1]), skew)
+        publish_ms: list[float] = []
+        rebalance_ms: list[float] = []
+        for i, k in enumerate(stream):
+            svc.insert(float(k))
+            if (i + 1) % publish_every == 0:
+                t0 = time.perf_counter()
+                svc.publish()
+                publish_ms.append((time.perf_counter() - t0) * 1e3)
+                if mode == "on" and svc.needs_rebalance():
+                    t0 = time.perf_counter()
+                    svc.rebalance()
+                    rebalance_ms.append((time.perf_counter() - t0) * 1e3)
+        t0 = time.perf_counter()
+        svc.publish()
+        publish_ms.append((time.perf_counter() - t0) * 1e3)
+
+        q = np.concatenate([
+            keys[rng.integers(0, n, size=n_queries // 2)],
+            stream[rng.integers(0, n_inserts, size=n_queries - n_queries // 2)]])
+        t = timeit(svc.lookup, q)
+        qps = n_queries / t
+        loads = svc.shard_loads()
+        stats = svc.service_stats()
+        results[f"rebalance_{mode}"] = {
+            "publish_ms_mean": float(np.mean(publish_ms)),
+            "publish_ms_p95": _percentile(publish_ms, 95),
+            "publish_ms_max": float(np.max(publish_ms)),
+            "publishes": len(publish_ms),
+            "rebalances": stats["rebalances"],
+            "rebalance_ms_total": float(np.sum(rebalance_ms)),
+            "queries_per_s": qps,
+            "ns_per_query": t / n_queries * 1e9,
+            "imbalance": stats["imbalance"],
+            "max_keys_per_shard": int(loads.max()),
+            "mean_keys_per_shard": float(loads.mean()),
+            "shard_set_version": stats["version"],
+        }
+        emit("rebalance", f"qps_{mode}", qps, f"backend={backend}")
+        emit("rebalance", f"publish_ms_mean_{mode}",
+             results[f"rebalance_{mode}"]["publish_ms_mean"])
+        emit("rebalance", f"imbalance_{mode}", stats["imbalance"])
+    write_json("bench_rebalance", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

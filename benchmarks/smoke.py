@@ -15,7 +15,7 @@ import argparse
 import platform
 import time
 
-from . import bench_insert, bench_lookup, bench_sharded
+from . import bench_insert, bench_lookup, bench_rebalance, bench_sharded
 from .common import write_json
 
 TINY = {
@@ -27,6 +27,11 @@ TINY = {
                 dict(n=20_000, n_queries=1_024, shard_counts=(1, 2, 4),
                      dirty_fracs=(0.0, 0.5, 1.0), publish_shards=4,
                      inserts_per_dirty_shard=64)),
+    # skew_threshold is tighter than the default so the tiny stream still
+    # trips at least one rebalance and the artifact tracks its cost
+    "rebalance": (bench_rebalance.run,
+                  dict(n=20_000, n_inserts=2_000, n_queries=1_024,
+                       n_shards=4, publish_every=256, skew_threshold=1.1)),
 }
 
 

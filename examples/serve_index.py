@@ -26,6 +26,18 @@ Shard-partitioning knobs (`ShardedIndexService`):
     always safe to call unconditionally: clean shards are skipped, and a
     fully clean service is a no-op.
 
+Rebalancing knobs (shard boundaries are NOT frozen at construction):
+  * ``skew_threshold`` (CLI ``--skew-threshold``) -- max/mean keys-per-shard
+    ratio above which ``rebalance()`` recuts the boundaries (duplicate-safe:
+    cuts snap to unique-key run starts) and migrates key runs between the
+    shard writers; 1.0 is perfectly even, 2.0 the default trigger.
+  * ``pending_weight`` -- how strongly unpublished per-shard inserts count
+    toward the skew metric (pressure forecast for write-hot shards).
+  * ``auto_rebalance`` -- run the skew check after every ``publish()``; the
+    recut swaps boundaries + serving handles atomically as one versioned
+    ``ShardSet``, so concurrent lookups never mix old routing with new
+    offsets.  ``service_stats()`` exposes the version + rebalance counters.
+
 Backend-dispatch knobs (``backend="dispatch"``, see
 ``repro.index.engine.DispatchEngine``):
   * ``small_max`` -- batches up to this size stay on the host (``numpy``):
@@ -54,6 +66,7 @@ def main():
     ap.add_argument("--error", type=int, default=64)
     ap.add_argument("--inserts", type=int, default=2000)
     ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--skew-threshold", type=float, default=1.5)
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
 
@@ -121,6 +134,34 @@ def main():
     for s in sharded.stats():
         print(f"    shard {s.shard}: epoch {s.epoch}, {s.n_segments} segs, "
               f"{s.n_keys} keys, {s.pending_inserts} pending")
+
+    # --- adaptive rebalancing: a write-hot range skews one shard; recut
+    if args.shards > 1:
+        reb = ShardedIndexService(keys, args.error, n_shards=args.shards,
+                                  buffer_size=args.error // 2,
+                                  skew_threshold=args.skew_threshold)
+        hot_n = max(args.inserts, args.n // args.shards)  # ~2x one shard
+        hot = np.setdiff1d(
+            rng.uniform(reb.boundaries[0], reb.boundaries[1],
+                        size=3 * hot_n).astype(np.float64), keys)[:hot_n]
+        for k in hot:
+            reb.insert(float(k))
+        reb.publish()
+        before = reb.imbalance()
+        tripped = reb.needs_rebalance()  # or auto_rebalance=True at build
+        t0 = time.perf_counter()
+        info = reb.rebalance(force=not tripped)   # demo always recuts
+        dt = time.perf_counter() - t0
+        assert np.all(reb.lookup(hot[: 256]) >= 0)
+        why = "threshold tripped" if tripped else "forced for the demo"
+        print(f"  rebalance ({why}): imbalance {before:.2f} -> "
+              f"{info['imbalance_after']:.2f}, moved {info['moved_keys']} "
+              f"keys in {dt*1e3:.1f} ms; ShardSet v{reb.shard_set.version} "
+              f"swapped atomically (lookups still oracle-exact)")
+        for s in reb.stats():
+            print(f"    shard {s.shard}: cut {s.boundary:.0f} (routes), "
+                  f"snapshot starts {s.snapshot_first_key:.0f}, "
+                  f"{s.n_keys} keys, epoch {s.epoch}")
 
     if args.distributed:
         from repro.core.distributed import build_sharded_index, lookup_allgather

@@ -76,6 +76,47 @@ class PackedRouter:
         return node
 
 
+def _merge_sorted(page: np.ndarray, run: np.ndarray,
+                  pl_page: np.ndarray | None = None,
+                  pl_run: np.ndarray | None = None
+                  ) -> tuple[np.ndarray, np.ndarray | None]:
+    """Stable two-way merge of two sorted key arrays (+ parallel payloads).
+
+    ``page`` elements come first among equal keys (side="right"), matching
+    the Alg. 4 buffer-merge semantics."""
+    merged = np.empty(page.shape[0] + run.shape[0], np.float64)
+    pos = np.searchsorted(page, run, side="right") + np.arange(run.shape[0])
+    mask = np.zeros(merged.shape[0], bool)
+    mask[pos] = True
+    merged[mask] = run
+    merged[~mask] = page
+    pl_merged = None
+    if pl_page is not None:
+        pl_merged = np.empty(merged.shape[0], pl_page.dtype)
+        pl_merged[mask] = pl_run
+        pl_merged[~mask] = pl_page
+    return merged, pl_merged
+
+
+def _paginate(arr: np.ndarray, pl: np.ndarray | None, segs: Segments
+              ) -> tuple[list[np.ndarray], list[np.ndarray] | None]:
+    """Slice a merged sorted run into per-segment pages (+ payload pages)."""
+    bounds = np.concatenate([segs.base, [arr.shape[0]]]).astype(np.int64)
+    pages = [arr[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
+    pl_pages = (None if pl is None else
+                [pl[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)])
+    return pages, pl_pages
+
+
+def _empty_segments(error: int) -> Segments:
+    """One degenerate zero-count segment: keeps routing well-defined for an
+    empty tree (mirrors ``SegmentTable.empty``)."""
+    return Segments(start_key=np.zeros(1, np.float64),
+                    slope=np.zeros(1, np.float64),
+                    base=np.zeros(1, np.int64),
+                    count=np.zeros(1, np.int64), error=int(error))
+
+
 class FITingTree:
     """The paper's index.  ``error`` is the user-visible max-error bound."""
 
@@ -97,7 +138,8 @@ class FITingTree:
         self.fanout = fanout
         self.clustered = payload is None
 
-        segs = shrinking_cone(keys, self.err_seg, mode=mode)
+        segs = (_empty_segments(self.err_seg) if keys.shape[0] == 0 else
+                shrinking_cone(keys, self.err_seg, mode=mode))
         self._init_pages(keys, payload, segs)
 
     # ------------------------------------------------------------------ build
@@ -277,25 +319,12 @@ class FITingTree:
         segs) for the k >= 1 replacement segments without mutating the tree."""
         page = self.pages[sid]
         buf = np.asarray(self.buffers[sid], np.float64)
-        merged = np.empty(page.shape[0] + buf.shape[0], np.float64)
-        pos = np.searchsorted(page, buf, side="right") + np.arange(buf.shape[0])
-        mask = np.zeros(merged.shape[0], bool)
-        mask[pos] = True
-        merged[mask] = buf
-        merged[~mask] = page
-        pl_merged = None
-        if self.payloads is not None:
-            pl_page = self.payloads[sid]
-            pl_buf = np.asarray(self.buf_payloads[sid])
-            pl_merged = np.empty(merged.shape[0], pl_page.dtype)
-            pl_merged[mask] = pl_buf
-            pl_merged[~mask] = pl_page
+        pl_page = None if self.payloads is None else self.payloads[sid]
+        pl_buf = (None if pl_page is None else
+                  np.asarray(self.buf_payloads[sid], dtype=pl_page.dtype))
+        merged, pl_merged = _merge_sorted(page, buf, pl_page, pl_buf)
         segs = shrinking_cone(merged, self.err_seg, mode=self.mode)
-        bounds = np.concatenate([segs.base, [merged.shape[0]]]).astype(np.int64)
-        new_pages = [merged[bounds[i]:bounds[i + 1]] for i in range(segs.n_segments)]
-        new_payloads = (None if pl_merged is None else
-                        [pl_merged[bounds[i]:bounds[i + 1]]
-                         for i in range(segs.n_segments)])
+        new_pages, new_payloads = _paginate(merged, pl_merged, segs)
         return new_pages, new_payloads, segs
 
     def _merge_segment(self, sid: int) -> None:
@@ -312,6 +341,123 @@ class FITingTree:
             self.start_keys[:sid], segs.start_key, self.start_keys[sid + 1:]])
         self.slopes = np.concatenate([
             self.slopes[:sid], segs.slope, self.slopes[sid + 1:]])
+        self.router = PackedRouter(self.start_keys, self.fanout)
+        self._flat_cache = None
+        self._table_cache = None
+
+    # ----------------------------------------------- shard migration (splice)
+    def extract_range(self, lo_key: float, hi_key: float
+                      ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Remove and return every key in ``[lo_key, hi_key)`` (+ payloads).
+
+        The donor half of shard rebalancing: buffers are flushed first so the
+        page view is complete, segments fully inside the range are handed
+        over wholesale, and a segment only partially covered is re-segmented
+        over its surviving keys (everything else keeps its fitted line, so
+        Eq. 1 still holds with err_seg).  Returns ``(keys, payloads)`` sorted
+        ascending; ``payloads`` is ``None`` for a clustered index.  Extracting
+        everything leaves a valid empty tree that ``splice_run`` / ``insert``
+        can refill."""
+        if hi_key < lo_key:        # inverted slices would duplicate keys
+            raise ValueError(f"inverted extract range: [{lo_key}, {hi_key})")
+        self.flush()
+        out_k: list[np.ndarray] = []
+        out_p: list[np.ndarray] = []
+        pages, payloads, start_keys, slopes = [], [], [], []
+        for sid in range(self.n_segments):
+            page = self.pages[sid]
+            a = int(np.searchsorted(page, lo_key, side="left"))
+            b = int(np.searchsorted(page, hi_key, side="left"))
+            pl = None if self.payloads is None else self.payloads[sid]
+            if a == b:                               # untouched: keep the fit
+                pages.append(page)
+                start_keys.append(self.start_keys[sid:sid + 1])
+                slopes.append(self.slopes[sid:sid + 1])
+                if pl is not None:
+                    payloads.append(pl)
+                continue
+            out_k.append(page[a:b].copy())
+            if pl is not None:
+                out_p.append(pl[a:b].copy())
+            rest = np.concatenate([page[:a], page[b:]])
+            if rest.shape[0] == 0:                   # fully extracted: drop
+                continue
+            rest_pl = None if pl is None else np.concatenate([pl[:a], pl[b:]])
+            segs = shrinking_cone(rest, self.err_seg, mode=self.mode)
+            pgs, pls = _paginate(rest, rest_pl, segs)
+            pages += pgs
+            start_keys.append(segs.start_key)
+            slopes.append(segs.slope)
+            if pls is not None:
+                payloads += pls
+        if not pages:                                # tree is now empty
+            pages = [np.empty(0, np.float64)]
+            start_keys = [np.zeros(1, np.float64)]
+            slopes = [np.zeros(1, np.float64)]
+            if self.payloads is not None:
+                payloads = [out_p[0][:0]]
+        self.pages = pages
+        if self.payloads is not None:
+            self.payloads = payloads
+        self.buffers = [[] for _ in pages]           # flush() emptied them
+        self.buf_payloads = [[] for _ in pages]
+        self.start_keys = np.concatenate(start_keys)
+        self.slopes = np.concatenate(slopes)
+        self.router = PackedRouter(self.start_keys, self.fanout)
+        self._flat_cache = None
+        self._table_cache = None
+        keys_out = (np.concatenate(out_k) if out_k else
+                    np.empty(0, np.float64))
+        pl_out = (None if self.payloads is None else
+                  np.concatenate(out_p) if out_p else
+                  self.payloads[0][:0])
+        return keys_out, pl_out
+
+    def splice_run(self, keys: np.ndarray,
+                   payload: np.ndarray | None = None) -> None:
+        """Merge a sorted key run (+ payloads) into the tree in bulk.
+
+        The receiving half of shard rebalancing: only the segments whose key
+        range overlaps the run are merged and re-segmented (Alg. 4 lines 5-9
+        applied to the spliced span); every other segment keeps its fitted
+        line.  Unlike ``insert`` this does not require an insert buffer, so
+        read-only trees can be rebalanced too."""
+        keys = np.asarray(keys, np.float64)
+        if self.clustered and payload is not None:
+            raise ValueError("tree built without payloads (clustered index); "
+                             "cannot splice a payload run")
+        if not self.clustered and payload is None:
+            raise ValueError("non-clustered tree: splice_run needs the "
+                             "payload run alongside the keys")
+        if keys.shape[0] == 0:
+            return
+        if payload is not None and len(payload) != keys.shape[0]:
+            raise ValueError("payload run length must match the key run")
+        self.flush()
+        if self.n_keys == 0:                         # refill an emptied tree
+            segs = shrinking_cone(keys, self.err_seg, mode=self.mode)
+            self._init_pages(keys.copy(), payload, segs)
+            return
+        s0 = self._segment_of(float(keys[0]))
+        s1 = self._segment_of(float(keys[-1]))
+        span = np.concatenate(self.pages[s0:s1 + 1])
+        pl_span = (None if self.payloads is None else
+                   np.concatenate(self.payloads[s0:s1 + 1]))
+        pl_run = (None if payload is None else
+                  np.asarray(payload, dtype=pl_span.dtype))
+        merged, pl_merged = _merge_sorted(span, keys, pl_span, pl_run)
+        segs = shrinking_cone(merged, self.err_seg, mode=self.mode)
+        k = segs.n_segments
+        pgs, pls = _paginate(merged, pl_merged, segs)
+        self.pages[s0:s1 + 1] = pgs
+        self.buffers[s0:s1 + 1] = [[] for _ in range(k)]
+        self.buf_payloads[s0:s1 + 1] = [[] for _ in range(k)]
+        if self.payloads is not None:
+            self.payloads[s0:s1 + 1] = pls
+        self.start_keys = np.concatenate([
+            self.start_keys[:s0], segs.start_key, self.start_keys[s1 + 1:]])
+        self.slopes = np.concatenate([
+            self.slopes[:s0], segs.slope, self.slopes[s1 + 1:]])
         self.router = PackedRouter(self.start_keys, self.fanout)
         self._flat_cache = None
         self._table_cache = None

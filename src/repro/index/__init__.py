@@ -17,21 +17,22 @@ are resolved lazily (PEP 562) so host-only code -- including the tree's
 ``from repro.index.table import ...`` -- never pulls in jax.
 """
 from .table import (SegmentTable, build_shard_tables, numpy_lookup,
-                    route_keys, shard_boundaries, shard_partition)
+                    route_keys, shard_boundaries, shard_cut_indices,
+                    shard_partition)
 
 _ENGINE_NAMES = {
     "DeviceIndex", "DispatchEngine", "LookupEngine", "LookupPlan",
     "available_backends", "device_index", "make_engine", "make_plan",
     "pad_keys", "pallas_lookup", "predict_positions", "register_backend",
-    "xla_lookup",
+    "snap_leftmost", "xla_lookup",
 }
 _SNAPSHOT_NAMES = {"ServingHandle", "Snapshot", "SnapshotPublisher"}
-_SHARDED_NAMES = {"PackedShardTables", "ShardStats", "ShardedIndexService",
-                  "pack_shard_tables"}
+_SHARDED_NAMES = {"PackedShardTables", "ShardSet", "ShardStats",
+                  "ShardedIndexService", "pack_shard_tables"}
 
 __all__ = [
     "SegmentTable", "build_shard_tables", "numpy_lookup", "route_keys",
-    "shard_boundaries", "shard_partition",
+    "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
 ]
 

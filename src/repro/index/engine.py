@@ -10,12 +10,14 @@ sharded serving).  It now exists exactly once per backend, behind a registry:
     pallas      bucketed compare-reduce TPU kernel with XLA-bisect fallback
 
 ``make_engine(table, backend=...)`` returns an engine whose ``lookup`` maps a
-query batch to global ranks (-1 if absent).  Backends return identical ranks
-for any duplicate-free key column whose keys and queries are exact in f32
-(e.g. integer keys < 2^24, the serving regime -- see rescale_keys): the
-``numpy`` backend compares in f64 while the device backends compare in f32,
-so a query that is only f32-equal to a stored key can differ in membership
-across that boundary.  ``DeviceIndex`` is the f32 device form of a
+query batch to global ranks (-1 if absent; the *leftmost* rank for duplicated
+keys -- every backend snaps a hit whose left neighbour equals the query to
+the run start, see ``snap_leftmost``, so ranks are segmentation-independent).
+Backends return identical ranks for any key column whose keys and queries
+are exact in f32 (e.g. integer keys < 2^24, the serving regime -- see
+rescale_keys): the ``numpy`` backend compares in f64 while the device
+backends compare in f32, so a query that is only f32-equal to a stored key
+can differ in membership across that boundary.  ``DeviceIndex`` is the f32 device form of a
 ``SegmentTable`` (re-exported by repro.core.jax_index for compatibility).
 """
 from __future__ import annotations
@@ -58,6 +60,22 @@ def device_index(table: SegmentTable) -> DeviceIndex:
 
 
 # --------------------------------------------------------------------- device
+def snap_leftmost(keys: jax.Array, queries: jax.Array, rank: jax.Array,
+                  hit: jax.Array) -> jax.Array:
+    """Snap duplicate hits to the leftmost occurrence (device mirror of the
+    ``numpy_lookup`` fix): when a found rank's left neighbour still equals
+    the query, the duplicate run straddles a segment boundary and the
+    window search returned an in-segment rank.  ``lax.cond`` skips the
+    full-column bisect entirely unless some query actually needs it, so the
+    duplicate-free fast path pays one extra gather."""
+    need = hit & (rank > 0) & (keys[jnp.maximum(rank - 1, 0)] == queries)
+    fixed = jax.lax.cond(
+        jnp.any(need),
+        lambda: jnp.searchsorted(keys, queries, side="left").astype(rank.dtype),
+        lambda: rank)
+    return jnp.where(need, fixed, rank)
+
+
 def predict_positions(idx: DeviceIndex, queries: jax.Array) -> jax.Array:
     """Interpolated (approximate) global positions; error <= idx.error by Eq. 1.
 
@@ -84,6 +102,7 @@ def xla_lookup(idx: DeviceIndex, queries: jax.Array,
         lt = (vals < queries[:, None]).sum(axis=1).astype(jnp.int32)
         rank = start + lt
         hit = (vals == queries[:, None]).any(axis=1)
+        rank = snap_leftmost(idx.keys, queries, rank, hit)
         return jnp.where(hit, rank, -1)
     # bisect: lo/hi halving on the clipped window
     lo = jnp.clip(pred - e, 0, n).astype(jnp.int32)
@@ -99,6 +118,7 @@ def xla_lookup(idx: DeviceIndex, queries: jax.Array,
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
     ok = (lo < n) & (idx.keys[jnp.minimum(lo, n - 1)] == queries)
+    lo = snap_leftmost(idx.keys, queries, lo, ok)
     return jnp.where(ok, lo, -1)
 
 
@@ -184,7 +204,7 @@ def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
                           lambda: xla_lookup(idx, queries, "bisect"),
                           lambda: res)
         res = jnp.where(need, fb, res)
-    return res
+    return snap_leftmost(idx.keys, queries, res, res >= 0)
 
 
 # ------------------------------------------------------------------- registry
@@ -243,6 +263,9 @@ class _DeviceEngine:
         self.index = device_index(table)
 
     def lookup(self, queries) -> np.ndarray:
+        if self.table.n_keys == 0:   # gathers on a 0-length device array are
+            q = np.asarray(queries)  # undefined; an empty table always misses
+            return np.full(q.shape, -1, np.int64)
         return np.asarray(self.fn(jnp.asarray(queries, jnp.float32)))
 
 

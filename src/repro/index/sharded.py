@@ -21,8 +21,26 @@ consistent (each lookup pins one shard snapshot); a batch spanning shards may
 observe different shards at different epochs -- exactly the contract the
 per-shard publish cadence buys.
 
+**Adaptive rebalancing.**  Boundaries are not frozen at construction: a
+write-hot key range makes one shard grow without bound, its publishes get
+slower, and its lookup windows dominate tail latency.  ``rebalance()``
+detects skew from the write-side loads (keys per shard plus
+``pending_weight``-scaled unpublished inserts, against ``skew_threshold``),
+recuts duplicate-safe equal-count boundaries over the merged current key
+view, migrates key runs (and payloads) between the ``FITingTree`` writers via
+their ``extract_range``/``splice_run`` path, republishes every shard into
+*fresh* serving handles, and swaps the whole routing view -- boundaries and
+handles together -- as one immutable versioned :class:`ShardSet` with a
+single reference assignment (the same discipline as
+``ServingHandle.install``).  An in-flight lookup that pinned the old
+``ShardSet`` keeps a fully consistent boundaries+snapshots view; it can never
+mix old routing with new offsets.  Pass ``auto_rebalance=True`` to trigger
+the check after every ``publish()``.
+
 ``stats()`` exposes per-shard observability (epoch, segment count, key count,
-pending inserts) for cadence tuning and dashboards.
+pending inserts, the routing cut *and* the installed snapshot's actual first
+key) and ``service_stats()`` the service-level view (ShardSet version,
+rebalance counters, current imbalance) for cadence tuning and dashboards.
 
 ``pack_shard_tables`` is the shared builder bridge: it pads a list of
 per-shard ``SegmentTable``s into rectangular (D, S_max) metadata arrays, the
@@ -36,7 +54,8 @@ from typing import NamedTuple, Sequence
 
 import numpy as np
 
-from repro.index.table import SegmentTable, route_keys, shard_partition
+from repro.index.table import (SegmentTable, route_keys, shard_boundaries,
+                               shard_partition)
 
 from .snapshot import ServingHandle, Snapshot, SnapshotPublisher
 
@@ -58,7 +77,16 @@ class PackedShardTables(NamedTuple):
 
 
 def pack_shard_tables(tables: Sequence[SegmentTable]) -> PackedShardTables:
-    """Pad per-shard segment metadata into the rectangular device layout."""
+    """Pad per-shard segment metadata into the rectangular device layout.
+
+    An *empty* shard inherits the next non-empty shard's first key as its
+    boundary (it owns an empty key range just below its successor), keeping
+    ``boundaries`` non-decreasing -- the ``route_keys`` precondition.  A bare
+    +inf for a non-tail empty shard would break the sort and misroute every
+    query at or above it.  Trailing empty shards keep +inf: no finite query
+    ever routes to them.  A query equal to an inherited boundary routes to
+    the *last* shard with that boundary (searchsorted side="right"), i.e. the
+    non-empty owner."""
     d = len(tables)
     s_max = max(t.n_segments for t in tables)
     seg_start = np.full((d, s_max), np.inf, np.float64)
@@ -75,36 +103,75 @@ def pack_shard_tables(tables: Sequence[SegmentTable]) -> PackedShardTables:
         seg_end[i, :s] = t.seg_end
         seg_end[i, s:] = t.n_keys
         boundaries[i] = t.keys[0] if t.n_keys else np.inf
+    for i in range(d - 2, -1, -1):      # backfill empty interior boundaries
+        if tables[i].n_keys == 0:
+            boundaries[i] = boundaries[i + 1]
     return PackedShardTables(seg_start, slope, base, seg_end, boundaries, s_max)
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardSet:
+    """One immutable, versioned routing view: boundaries + serving handles.
+
+    Published as a whole with a single reference assignment
+    (``service._shard_set = ShardSet(...)``), mirroring
+    ``ServingHandle.install``: a reader that pinned a ``ShardSet`` resolves
+    routing, snapshots, and rank offsets against that one object, so a
+    concurrent rebalance can never make it mix old boundaries with new
+    handles (or vice versa).  Regular publishes reuse the current set's
+    handles (boundaries are unchanged); a rebalance always builds fresh
+    handles so retired sets keep serving their own epoch consistently."""
+    version: int
+    boundaries: np.ndarray               # (D,) f64 router cuts
+    handles: tuple[ServingHandle, ...]   # one per shard, same order
+
+
+@dataclasses.dataclass(frozen=True)
 class ShardStats:
-    """One shard's observable serving state (a point-in-time sample)."""
-    shard: int            # shard id (position in key order)
-    boundary: float       # first key routed here (shard 0 also takes below)
-    epoch: int            # epoch of the shard's installed snapshot
-    n_segments: int       # segments in the installed snapshot
-    n_keys: int           # keys served by the installed snapshot
-    pending_inserts: int  # inserts buffered since this shard's last publish
+    """One shard's observable serving state (a point-in-time sample).
+
+    ``boundary`` is the *router* cut -- the first key routed to this shard
+    under the current ``ShardSet`` (shard 0 also takes everything below it);
+    this is the value that routes.  ``snapshot_first_key`` is the installed
+    snapshot's actual first key, which drifts below/above the cut between
+    publishes (inserts land by routing, so shard 0's snapshot can start
+    below its cut) -- report both, dashboard the drift, trust ``boundary``
+    for routing.  ``snapshot_first_key`` is NaN for an empty snapshot."""
+    shard: int                # shard id (position in key order)
+    boundary: float           # router cut (this one routes)
+    epoch: int                # epoch of the shard's installed snapshot
+    n_segments: int           # segments in the installed snapshot
+    n_keys: int               # keys served by the installed snapshot
+    pending_inserts: int      # inserts buffered since this shard's last publish
+    snapshot_first_key: float = float("nan")  # installed snapshot's first key
+    version: int = 1          # ShardSet version the sample was taken from
 
 
 class ShardedIndexService:
     """N key-partitioned writable indexes, each with its own epoch stream.
 
     Construction partitions the (sorted) build keys into equal-count
-    contiguous shards (:func:`shard_partition`; the tail stays in the last
-    shard -- nothing is dropped) and publishes epoch 1 on every shard.  From
-    then on writes and publishes are per-shard:
+    contiguous shards (:func:`shard_partition`; cuts snap to unique-key run
+    starts and the tail stays in the last shard -- nothing is dropped) and
+    publishes epoch 1 on every shard.  From then on writes and publishes are
+    per-shard:
 
         svc = ShardedIndexService(keys, error=64, n_shards=8, buffer_size=16)
         svc.insert(k)          # routed to the owning shard, buffered (Alg. 4)
         svc.publish()          # republishes ONLY dirty shards; clean shards
                                # keep their snapshot and epoch number
         svc.lookup(q)          # global ranks, any engine backend
+        svc.rebalance()        # recut boundaries if shard growth skewed
 
     ``backend`` may be any registered engine, including ``"dispatch"`` (the
     batch-size-aware tier router in ``repro.index.engine``).
+
+    Rebalancing knobs: ``skew_threshold`` is the max/mean keys-per-shard
+    ratio above which :meth:`rebalance` acts (:meth:`needs_rebalance`);
+    ``pending_weight`` scales unpublished per-shard insert counts into the
+    load metric (pressure forecast: a shard with heavy in-flight traffic is
+    treated as still growing); ``auto_rebalance=True`` runs the check after
+    every :meth:`publish`.
     """
 
     def __init__(self, keys: np.ndarray, error: int, *, n_shards: int = 4,
@@ -112,6 +179,9 @@ class ShardedIndexService:
                  mode: str = "paper", backend: str = "numpy",
                  engine_opts: dict[str, dict] | None = None,
                  publish_every: int | None = None,
+                 skew_threshold: float = 2.0,
+                 pending_weight: float = 1.0,
+                 auto_rebalance: bool = False,
                  assume_sorted: bool = False):
         # lazy: repro.core.tree imports repro.index.table at module level
         from repro.core.tree import FITingTree
@@ -119,6 +189,9 @@ class ShardedIndexService:
         if publish_every is not None and buffer_size == 0:
             raise ValueError("publish_every requires buffer_size > 0 "
                              "(a read-only service never republishes)")
+        if skew_threshold < 1.0:
+            raise ValueError("skew_threshold must be >= 1.0 "
+                             "(max/mean load ratio; 1.0 is perfectly even)")
         keys = np.asarray(keys, np.float64)
         if not assume_sorted:
             order = np.argsort(keys, kind="stable")
@@ -131,8 +204,15 @@ class ShardedIndexService:
         self.default_backend = backend
         self.publish_every = publish_every
         self.has_payload = payload is not None
+        self.skew_threshold = float(skew_threshold)
+        self.pending_weight = float(pending_weight)
+        self.auto_rebalance = bool(auto_rebalance)
+        self._engine_opts = engine_opts
+        self._rebalances = 0
+        self._rebalance_skipped = 0
+        self._last_rebalance: dict | None = None
 
-        self.boundaries, splits = shard_partition(keys, n_shards)
+        bounds, splits = shard_partition(keys, n_shards)
         offsets = np.concatenate(
             [[0], np.cumsum([s.shape[0] for s in splits])[:-1]]).astype(np.int64)
         self.writers = [
@@ -142,15 +222,32 @@ class ShardedIndexService:
                        assume_sorted=True)
             for d, split in enumerate(splits)]
         self.publishers = [SnapshotPublisher(t) for t in self.writers]
-        self.handles = [ServingHandle(engine_opts) for _ in self.writers]
+        handles = tuple(ServingHandle(engine_opts) for _ in self.writers)
         self._pending = [0] * n_shards
-        for pub, handle in zip(self.publishers, self.handles):
+        for pub, handle in zip(self.publishers, handles):
             handle.install(pub.publish())     # epoch 1 everywhere
+        self._shard_set = ShardSet(version=1, boundaries=bounds,
+                                   handles=handles)
 
     # ------------------------------------------------------------------ shape
     @property
     def n_shards(self) -> int:
         return len(self.writers)
+
+    @property
+    def shard_set(self) -> ShardSet:
+        """The current immutable routing view (pin it for consistency)."""
+        return self._shard_set
+
+    @property
+    def boundaries(self) -> np.ndarray:
+        """Router cuts of the current ShardSet (first key per shard)."""
+        return self._shard_set.boundaries
+
+    @property
+    def handles(self) -> tuple[ServingHandle, ...]:
+        """Serving handles of the current ShardSet (one per shard)."""
+        return self._shard_set.handles
 
     @property
     def pending_inserts(self) -> int:
@@ -159,22 +256,38 @@ class ShardedIndexService:
 
     def shard_of(self, key: float) -> int:
         """The shard owning ``key`` (route through the boundary router)."""
-        return int(route_keys(self.boundaries, np.float64(key)))
+        return int(route_keys(self._shard_set.boundaries, np.float64(key)))
 
     def epochs(self) -> list[int]:
         """Current epoch per shard (independent streams)."""
-        return [h.epoch for h in self.handles]
+        return [h.epoch for h in self._shard_set.handles]
 
     def stats(self) -> list[ShardStats]:
-        """Per-shard observability sample: epoch, size, pending writes."""
+        """Per-shard observability sample: epoch, size, pending writes, the
+        routing cut and the installed snapshot's actual first key."""
+        ss = self._shard_set
         out = []
-        for d, (handle, pend) in enumerate(zip(self.handles, self._pending)):
+        for d, (handle, pend) in enumerate(zip(ss.handles, self._pending)):
             snap = handle.current()
+            first = float(snap.table.keys[0]) if snap.n_keys else float("nan")
             out.append(ShardStats(
-                shard=d, boundary=float(self.boundaries[d]), epoch=snap.epoch,
+                shard=d, boundary=float(ss.boundaries[d]), epoch=snap.epoch,
                 n_segments=snap.table.n_segments, n_keys=snap.n_keys,
-                pending_inserts=pend))
+                pending_inserts=pend, snapshot_first_key=first,
+                version=ss.version))
         return out
+
+    def service_stats(self) -> dict:
+        """Service-level observability: ShardSet version, rebalance counters
+        (completed / auto-skipped), the last rebalance summary, and the
+        current write-side imbalance."""
+        return {"version": self._shard_set.version,
+                "n_shards": self.n_shards,
+                "imbalance": self.imbalance(),
+                "rebalances": self._rebalances,
+                "rebalance_skipped": self._rebalance_skipped,
+                "last_rebalance": self._last_rebalance,
+                "pending_inserts": self.pending_inserts}
 
     # ------------------------------------------------------------- write path
     def insert(self, key: float, value=None) -> None:
@@ -201,7 +314,8 @@ class ShardedIndexService:
         writer and the installed snapshot)."""
         return (self._pending[sid] > 0
                 or bool(self.writers[sid].dirty_segments())
-                or self.writers[sid].n_keys != self.handles[sid].current().n_keys)
+                or self.writers[sid].n_keys
+                != self._shard_set.handles[sid].current().n_keys)
 
     def publish(self, shards: Sequence[int] | None = None,
                 force: bool = False) -> dict[int, Snapshot]:
@@ -213,17 +327,126 @@ class ShardedIndexService:
         republish clean shards too (cadence-loop safe either way: with
         nothing dirty this is a no-op returning ``{}``).  Returns the newly
         installed snapshots keyed by shard id.
+
+        With ``auto_rebalance=True`` a skew check runs after the sweep and
+        may recut boundaries (see :meth:`rebalance`); a recut that is
+        impossible (fewer distinct keys than shards) is skipped and counted
+        in ``service_stats()['rebalance_skipped']``.
         """
+        ss = self._shard_set
         targets = range(self.n_shards) if shards is None else shards
         published: dict[int, Snapshot] = {}
         for sid in targets:
             if not force and not self._shard_dirty(sid):
                 continue
             snap = self.publishers[sid].publish()
-            self.handles[sid].install(snap)
+            ss.handles[sid].install(snap)
             self._pending[sid] = 0
             published[sid] = snap
+        if self.auto_rebalance and published and self.needs_rebalance():
+            try:
+                self.rebalance()
+            except ValueError:       # < n_shards distinct keys: no safe recut
+                self._rebalance_skipped += 1
         return published
+
+    # ------------------------------------------------------------- rebalance
+    def shard_loads(self) -> np.ndarray:
+        """Write-side load per shard: the writer's current key count (pages +
+        Alg. 4 buffers) plus ``pending_weight`` x its unpublished service
+        inserts -- the pending term forecasts continued pressure on a
+        write-hot shard before its next publish."""
+        loads = np.array([w.n_keys for w in self.writers], np.float64)
+        return loads + self.pending_weight * np.asarray(self._pending,
+                                                        np.float64)
+
+    def imbalance(self) -> float:
+        """Max/mean of :meth:`shard_loads` (1.0 = perfectly even)."""
+        loads = self.shard_loads()
+        mean = float(loads.mean())
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+    def needs_rebalance(self) -> bool:
+        """True when the load imbalance exceeds ``skew_threshold``."""
+        return self.n_shards > 1 and self.imbalance() > self.skew_threshold
+
+    def rebalance(self, force: bool = False) -> dict | None:
+        """Recut shard boundaries to equal counts and migrate the key runs.
+
+        No-op (returns ``None``) when balanced, unless ``force=True``.
+        Otherwise: flush every writer, recut duplicate-safe equal-count
+        boundaries over the merged current key view (raises ``ValueError``
+        when the view has fewer distinct keys than shards), move the key
+        runs that changed owner between writers via
+        ``extract_range``/``splice_run`` (payloads travel with their keys),
+        republish every shard into *fresh* serving handles, and publish the
+        new routing view atomically as the next :class:`ShardSet` version.
+        Readers never block: an in-flight lookup keeps the old set, whose
+        retired snapshots still serve their own epochs correctly.
+
+        Returns a summary dict (also kept in ``service_stats()``):
+        version, keys moved, and the imbalance before/after.
+        """
+        if self.n_shards == 1:
+            return None
+        before = self.imbalance()
+        if not force and before <= self.skew_threshold:
+            return None
+        for w in self.writers:
+            w.flush()
+        merged = np.concatenate([w.as_table().keys for w in self.writers])
+        new_bounds = shard_boundaries(merged, self.n_shards)
+        if not force and np.array_equal(new_bounds, self._shard_set.boundaries):
+            # the recut cannot help (duplicate-snapped cuts already match the
+            # current ones): nothing would move, so skip the churn of
+            # republishing every shard; counted for observability
+            self._rebalance_skipped += 1
+            return None
+
+        n = self.n_shards
+        moves_k: list[list[np.ndarray]] = [[] for _ in range(n)]
+        moves_p: list[list[np.ndarray]] = [[] for _ in range(n)]
+        moved = 0
+        for d, w in enumerate(self.writers):
+            parts = []
+            if d > 0:                # keys now owned by an earlier shard
+                parts.append(w.extract_range(-np.inf, new_bounds[d]))
+            if d + 1 < n:            # keys now owned by a later shard
+                parts.append(w.extract_range(new_bounds[d + 1], np.inf))
+            for part_k, part_p in parts:
+                if part_k.shape[0] == 0:
+                    continue
+                tgt = route_keys(new_bounds, part_k)
+                for t in np.unique(tgt):
+                    sel = tgt == t
+                    moves_k[t].append(part_k[sel])
+                    if part_p is not None:
+                        moves_p[t].append(part_p[sel])
+                    moved += int(sel.sum())
+        for t in range(n):
+            if not moves_k[t]:
+                continue
+            run = np.concatenate(moves_k[t])
+            pl = np.concatenate(moves_p[t]) if moves_p[t] else None
+            order = np.argsort(run, kind="stable")
+            self.writers[t].splice_run(run[order],
+                                       None if pl is None else pl[order])
+
+        ss = self._shard_set
+        new_handles = tuple(ServingHandle(self._engine_opts)
+                            for _ in self.writers)
+        for pub, handle in zip(self.publishers, new_handles):
+            handle.install(pub.publish())
+        # the swap: one reference assignment publishes boundaries + handles
+        self._shard_set = ShardSet(version=ss.version + 1,
+                                   boundaries=new_bounds,
+                                   handles=new_handles)
+        self._pending = [0] * n
+        self._rebalances += 1
+        self._last_rebalance = {
+            "version": self._shard_set.version, "moved_keys": moved,
+            "imbalance_before": before, "imbalance_after": self.imbalance()}
+        return self._last_rebalance
 
     # -------------------------------------------------------------- read path
     def lookup(self, queries, backend: str | None = None) -> np.ndarray:
@@ -232,16 +455,19 @@ class ShardedIndexService:
         that shard's engine; local ranks are lifted to global ranks with the
         preceding shards' snapshot key counts.
 
-        All shard engines are pinned up front, so the offsets and the answers
-        come from one self-consistent set of snapshots even if a publish
-        lands mid-batch (engines are cached per snapshot per backend inside
-        each handle, so pinning is an O(1) dict hit after the first call)."""
+        The ``ShardSet`` is pinned once (a single reference read), then all
+        shard engines are pinned from it up front, so the routing, the
+        offsets and the answers come from one self-consistent view even if a
+        publish or rebalance lands mid-batch (engines are cached per snapshot
+        per backend inside each handle, so pinning is an O(1) dict hit after
+        the first call)."""
         backend = backend or self.default_backend
-        if self.n_shards == 1:                      # the IndexService path
-            return self.handles[0].lookup(queries, backend)
-        engines = [h.engine(backend) for h in self.handles]
+        ss = self._shard_set                        # pin the routing view
+        if len(ss.handles) == 1:                    # the IndexService path
+            return ss.handles[0].lookup(queries, backend)
+        engines = [h.engine(backend) for h in ss.handles]
         q = np.asarray(queries, np.float64)
-        sid = route_keys(self.boundaries, q)
+        sid = route_keys(ss.boundaries, q)
         sizes = [e.table.n_keys for e in engines]
         offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
         out = np.full(q.shape, -1, np.int64)

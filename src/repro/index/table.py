@@ -89,11 +89,23 @@ class SegmentTable:
         """Segment ``keys`` (Alg. 2) and build the table in one step."""
         from repro.core.segmentation import shrinking_cone  # lazy: no cycle
         keys = np.asarray(keys, np.float64)
+        if keys.shape[0] == 0:
+            return cls.empty(error, epoch=epoch)
         if not assume_sorted:
             keys = np.sort(keys, kind="stable")
         if segs is None:
             segs = shrinking_cone(keys, error, mode=mode)
         return cls.from_segments(keys, segs, error=error, epoch=epoch)
+
+    @classmethod
+    def empty(cls, error: int, epoch: int = 0) -> "SegmentTable":
+        """Zero-key table: one degenerate segment with an empty [0, 0) rank
+        range, so routing and windows stay well-defined (every lookup misses).
+        Zero segments would break ``route_keys`` (clip would wrap to -1)."""
+        return cls(
+            start_key=np.zeros(1, np.float64), slope=np.zeros(1, np.float64),
+            base=np.zeros(1, np.int64), seg_end=np.zeros(1, np.int64),
+            keys=np.empty(0, np.float64), error=int(error), epoch=int(epoch))
 
     # ----------------------------------------------------------------- sizing
     @property
@@ -153,11 +165,14 @@ class SegmentTable:
 def numpy_lookup(table: SegmentTable, queries) -> np.ndarray:
     """Host bounded bisect over the f64 key column (the ``numpy`` engine
     backend and the tree's batch path): interpolate then log2(2*err) halving
-    steps inside the window.  Returns global ranks, -1 if absent."""
+    steps inside the window.  Returns global ranks -- the *leftmost*
+    occurrence for duplicated keys -- and -1 if absent."""
     q = np.asarray(queries, np.float64)
-    lo, hi = table.window(q)
     keys = table.keys
     n = keys.shape[0]
+    if n == 0:                      # empty table: every probe misses
+        return np.full(q.shape, -1, np.int64)
+    lo, hi = table.window(q)
     steps = max(1, math.ceil(math.log2(2 * table.error + 2)))
     for _ in range(steps):
         mid = (lo + hi) // 2
@@ -166,7 +181,61 @@ def numpy_lookup(table: SegmentTable, queries) -> np.ndarray:
         lo = np.where(go_right, mid + 1, lo)
         hi = np.where(go_right, hi, mid)
     ok = (lo < n) & (keys[np.minimum(lo, max(n - 1, 0))] == q)
+    # a duplicate run straddling a segment boundary clamps the window to the
+    # routed (rightmost) segment, so the bisect lands on the in-segment
+    # leftmost; snap such hits to the global leftmost occurrence (rare: only
+    # when the left neighbour is also equal to the query)
+    fix = ok & (lo > 0) & (keys[np.maximum(lo - 1, 0)] == q)
+    if np.any(fix):
+        hits = np.flatnonzero(fix)      # bisect only the queries that need it
+        lo = lo.copy()
+        lo.flat[hits] = np.searchsorted(keys, q.flat[hits], side="left")
     return np.where(ok, lo, -1).astype(np.int64)
+
+
+def shard_cut_indices(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Duplicate-safe equal-count cut indices into sorted ``keys``.
+
+    Returns ``(n_shards,)`` strictly increasing indices with ``cuts[0] == 0``;
+    shard d owns ``keys[cuts[d]:cuts[d+1]]``.  Each cut starts at an
+    equal-count target (``d * n // n_shards``) and is *snapped to the start of
+    the unique-key run containing it*, so a run of duplicate keys never
+    straddles two shards.  Without the snap, the boundary router (which sends
+    a query to the rightmost shard whose first key is <= it) and the partition
+    would disagree on duplicated boundary keys and sharded lookups would lose
+    the leftmost-rank contract of the single-table engines.
+
+    When snapping left would collide with the previous cut (a duplicate run
+    longer than a shard), the cut advances to the next unique-run start
+    instead; raises ``ValueError`` when ``keys`` has fewer distinct values
+    than ``n_shards`` (no duplicate-safe partition into non-empty shards
+    exists)."""
+    keys = np.asarray(keys, np.float64)
+    n = keys.shape[0]
+    if n_shards < 1:
+        raise ValueError("n_shards must be >= 1")
+    if n < n_shards:
+        raise ValueError(f"cannot cut {n} keys into "
+                         f"{n_shards} non-empty shards")
+    # first index of every distinct-key run (keys sorted => runs contiguous)
+    run_starts = np.flatnonzero(
+        np.concatenate(([True], keys[1:] != keys[:-1])))
+    u = run_starts.shape[0]
+    if u < n_shards:
+        raise ValueError(f"cannot cut {u} distinct keys into {n_shards} "
+                         f"duplicate-safe non-empty shards")
+    m = n // n_shards
+    cuts = np.zeros(n_shards, np.int64)
+    prev = 0                        # index into run_starts of the last cut
+    for j in range(1, n_shards):
+        pos = int(np.searchsorted(run_starts, j * m, side="right")) - 1
+        # stay ahead of the previous cut, and leave one distinct run start
+        # for every remaining shard (both bounds are always satisfiable
+        # because u >= n_shards)
+        pos = min(max(pos, prev + 1), u - (n_shards - j))
+        cuts[j] = run_starts[pos]
+        prev = pos
+    return cuts
 
 
 def shard_boundaries(keys: np.ndarray, n_shards: int) -> np.ndarray:
@@ -175,15 +244,12 @@ def shard_boundaries(keys: np.ndarray, n_shards: int) -> np.ndarray:
     These are the replicated top-level router of the sharded index -- the
     paper's structure recursed once.  Routing a query through them with
     :func:`route_keys` names its owning shard; queries below the first cut
-    clamp to shard 0, so the partition is total over the key space."""
+    clamp to shard 0, so the partition is total over the key space.  Cuts are
+    duplicate-safe (see :func:`shard_cut_indices`): a boundary is always the
+    first occurrence of its key, so equal keys all route to, and live in,
+    the same shard."""
     keys = np.asarray(keys, np.float64)
-    if n_shards < 1:
-        raise ValueError("n_shards must be >= 1")
-    if keys.shape[0] < n_shards:
-        raise ValueError(f"cannot cut {keys.shape[0]} keys into "
-                         f"{n_shards} non-empty shards")
-    m = keys.shape[0] // n_shards
-    return keys[np.arange(n_shards) * m].copy()
+    return keys[shard_cut_indices(keys, n_shards)].copy()
 
 
 def shard_partition(keys: np.ndarray, n_shards: int
@@ -195,12 +261,11 @@ def shard_partition(keys: np.ndarray, n_shards: int
     Unlike :func:`build_shard_tables` nothing is dropped: the tail beyond the
     equal-count cut lands in the last shard, so ``concat(splits) == keys``
     and a shard's global rank offset is the summed length of its
-    predecessors."""
+    predecessors.  Cuts snap to unique-key run starts
+    (:func:`shard_cut_indices`), so no duplicate run straddles a shard."""
     keys = np.asarray(keys, np.float64)
-    bounds = shard_boundaries(keys, n_shards)
-    m = keys.shape[0] // n_shards
-    cuts = (np.arange(1, n_shards) * m).tolist()
-    return bounds, np.split(keys, cuts)
+    cuts = shard_cut_indices(keys, n_shards)
+    return keys[cuts].copy(), np.split(keys, cuts[1:])
 
 
 def build_shard_tables(keys: np.ndarray, error: int, n_shards: int,
@@ -208,7 +273,10 @@ def build_shard_tables(keys: np.ndarray, error: int, n_shards: int,
     """Equal-count contiguous range partition: one independent SegmentTable per
     shard (local ranks).  The tail beyond ``n_shards * (n // n_shards)`` is
     dropped, as in the original sharded builder (callers handle it); the
-    serving-side partition that keeps every key is :func:`shard_partition`."""
+    serving-side partition that keeps every key is :func:`shard_partition`.
+    Cuts here are *rectangular*, not duplicate-safe: the (D, M) device layout
+    requires equal shard sizes, so the distributed path assumes distinct keys
+    (its tests and datasets are duplicate-free)."""
     keys = np.asarray(keys, np.float64)
     m = keys.shape[0] // n_shards
     shards = keys[: m * n_shards].reshape(n_shards, m)

@@ -1,6 +1,6 @@
 """Serving steps, paged KV cache, batching, and index snapshot serving."""
-from repro.index.sharded import ShardedIndexService, ShardStats
+from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
 
 from .index_service import IndexService
 
-__all__ = ["IndexService", "ShardedIndexService", "ShardStats"]
+__all__ = ["IndexService", "ShardSet", "ShardedIndexService", "ShardStats"]

@@ -14,10 +14,12 @@ consistent view.
 
 ``IndexService`` is the single-host form: a thin wrapper over a one-shard
 ``repro.index.sharded.ShardedIndexService`` (the N-shard generalization with
-per-shard epochs lives there; re-exported by ``repro.serve``).  ``publish``
-with zero pending inserts is a **no-op** returning the current snapshot --
-periodic publish-cadence loops need no guard logic and idle ticks don't churn
-epoch numbers or engine caches.
+per-shard epochs and adaptive shard rebalancing lives there; re-exported by
+``repro.serve``).  ``publish`` with zero pending inserts is a **no-op**
+returning the current snapshot -- periodic publish-cadence loops need no
+guard logic and idle ticks don't churn epoch numbers or engine caches.
+Rebalancing is inherently a no-op with one shard; use the sharded service
+directly when write skew matters.
 """
 from __future__ import annotations
 
@@ -90,3 +92,7 @@ class IndexService:
     def pending_inserts(self) -> int:
         """Inserts buffered since the last publish (invisible to serving)."""
         return self._sharded.pending_inserts
+
+    def stats(self):
+        """The single shard's observability sample (see ShardStats)."""
+        return self._sharded.stats()

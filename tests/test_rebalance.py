@@ -1,0 +1,415 @@
+"""Adaptive shard rebalancing + the routing/edge-case bugfix sweep.
+
+Covers: duplicate-safe boundary cuts (no run straddles a shard; sharded
+lookups match the single-table numpy oracle on duplicate-heavy data across
+every backend, before and after a rebalance), the tree-level
+extract_range/splice_run migration path, skew detection and the atomic
+ShardSet swap, empty-table lookups on every backend, the pack_shard_tables
+empty-interior-shard boundary fix, and (slow) a writer+reader thread race
+showing an auto-publish/rebalance mid-stream never yields a half-swapped
+routing view.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.tree import FITingTree
+from repro.index import (SegmentTable, ShardedIndexService, make_engine,
+                         numpy_lookup, pack_shard_tables, route_keys,
+                         shard_cut_indices, shard_partition)
+
+FIVE_BACKENDS = ("numpy", "xla-window", "xla-bisect", "pallas", "dispatch")
+
+
+def _dup_heavy_keys(n, seed=0, max_run=6, lim=2 ** 20):
+    """Sorted integer-valued keys with duplicate runs of length <= max_run
+    (exact in f32, runs shorter than the error bound)."""
+    rng = np.random.default_rng(seed)
+    uniq = np.sort(rng.choice(lim, size=n // 2, replace=False))
+    reps = rng.integers(1, max_run + 1, size=uniq.shape[0])
+    return np.repeat(uniq, reps)[:n].astype(np.float64)
+
+
+def _fresh(rng, existing, lo, hi, count):
+    cand = np.setdiff1d(np.unique(rng.integers(lo, hi, size=8 * count)
+                                  ).astype(np.float64), existing)
+    assert cand.shape[0] >= count
+    return cand[:count]
+
+
+# -------------------------------------------------- duplicate-safe boundaries
+def test_cut_never_lands_mid_duplicate_run():
+    rng = np.random.default_rng(3)
+    for trial in range(30):
+        n = int(rng.integers(16, 400))
+        keys = np.sort(rng.integers(0, n // 2 + 2, size=n).astype(np.float64))
+        for s in (2, 3, 5, 8):
+            if np.unique(keys).shape[0] < s:
+                continue
+            cuts = shard_cut_indices(keys, s)
+            assert cuts[0] == 0 and np.all(np.diff(cuts) > 0)
+            for c in cuts[1:]:      # every cut starts a fresh unique run
+                assert keys[c - 1] != keys[c], (trial, s, c)
+            bounds, splits = shard_partition(keys, s)
+            assert all(sp.shape[0] > 0 for sp in splits)
+            np.testing.assert_array_equal(np.concatenate(splits), keys)
+
+
+def test_cut_rejects_more_shards_than_distinct_keys():
+    keys = np.array([1.0, 1.0, 2.0, 2.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="distinct"):
+        shard_cut_indices(keys, 4)
+    # 3 shards is exactly feasible: one run each
+    bounds, splits = shard_partition(keys, 3)
+    np.testing.assert_array_equal(bounds, [1.0, 2.0, 3.0])
+    assert [s.tolist() for s in splits] == [[1, 1], [2, 2, 2], [3]]
+
+
+def test_issue_example_duplicate_straddle():
+    """keys=[1,2,2,3], 2 shards: query 2 must return the leftmost rank 1,
+    exactly as the unsharded table does (pre-fix it returned rank 2)."""
+    keys = np.array([1.0, 2.0, 2.0, 3.0])
+    table = SegmentTable.from_keys(keys, 8, assume_sorted=True)
+    svc = ShardedIndexService(keys, error=8, n_shards=2, assume_sorted=True)
+    assert numpy_lookup(table, [2.0])[0] == 1
+    assert svc.lookup([2.0])[0] == 1
+    assert svc.boundaries.tolist() == [1.0, 2.0]
+
+
+def test_sharded_matches_single_table_oracle_on_duplicates_all_backends():
+    """Acceptance: sharded lookups == single-table numpy oracle on
+    duplicate-heavy keys, before AND after rebalance(), on all five
+    backends.  Includes a duplicate run far longer than the error bound
+    (which Eq. 1 forces to split across segments), so the leftmost-rank
+    snap is exercised, not just the shard-cut fix."""
+    error = 32
+    keys = np.sort(np.concatenate([_dup_heavy_keys(3000, seed=5),
+                                   np.full(3 * error, 2.0 ** 19)]))
+    oracle_table = SegmentTable.from_keys(keys, error, assume_sorted=True)
+    rng = np.random.default_rng(6)
+    q = np.concatenate([keys[rng.integers(0, keys.shape[0], 120)],
+                        rng.uniform(0, 2 ** 20, size=40), [2.0 ** 19]])
+    want = numpy_lookup(oracle_table, q)
+    # sanity: on present duplicated keys the oracle is the leftmost rank
+    present = want >= 0
+    np.testing.assert_array_equal(
+        want[present], np.searchsorted(keys, q[present], side="left"))
+
+    svc = ShardedIndexService(keys, error=error, n_shards=3, buffer_size=8,
+                              assume_sorted=True)
+    for backend in FIVE_BACKENDS:
+        np.testing.assert_array_equal(svc.lookup(q, backend), want,
+                                      err_msg=f"pre-rebalance {backend}")
+    info = svc.rebalance(force=True)
+    assert info is not None and svc.shard_set.version == 2
+    for backend in FIVE_BACKENDS:
+        np.testing.assert_array_equal(svc.lookup(q, backend), want,
+                                      err_msg=f"post-rebalance {backend}")
+
+
+# --------------------------------------------------- tree-level splice/extract
+def test_extract_splice_roundtrip_with_payloads():
+    keys = np.arange(0.0, 300.0)
+    pay = (keys * 7).astype(np.int64)
+    donor = FITingTree(keys, error=16, payload=pay, assume_sorted=True)
+    run_k, run_p = donor.extract_range(100.0, 180.0)
+    np.testing.assert_array_equal(run_k, np.arange(100.0, 180.0))
+    np.testing.assert_array_equal(run_p, (run_k * 7).astype(np.int64))
+    assert donor.n_keys == 220
+    assert donor.max_abs_error() <= donor.err_seg + 1e-6
+    assert donor.lookup(150.0) is None and donor.lookup(99.0) is not None
+
+    taker = FITingTree(np.arange(400.0, 500.0), error=16,
+                       payload=np.arange(400, 500) * 7, assume_sorted=True)
+    taker.splice_run(run_k, run_p)
+    assert taker.n_keys == 180
+    assert taker.max_abs_error() <= taker.err_seg + 1e-6
+    for probe in (100.0, 179.0, 400.0, 499.0):
+        hit = taker.lookup(probe)
+        assert hit is not None and hit[2] == int(probe * 7), probe
+    # global ranks over the merged column match searchsorted
+    tab = taker.as_table()
+    np.testing.assert_array_equal(
+        numpy_lookup(tab, run_k), np.searchsorted(tab.keys, run_k))
+
+
+def test_extract_everything_leaves_valid_empty_tree():
+    t = FITingTree(np.arange(50.0), error=8, buffer_size=4, assume_sorted=True)
+    out_k, out_p = t.extract_range(-np.inf, np.inf)
+    assert out_k.shape[0] == 50 and out_p is None
+    assert t.n_keys == 0
+    assert t.lookup(3.0) is None
+    assert t.lookup_batch(np.arange(5.0)).tolist() == [-1] * 5
+    t.splice_run(np.array([7.0, 9.0]))        # refill via the bulk path
+    t.insert(8.0)                             # and via Alg. 4
+    assert t.n_keys == 3 and t.lookup(9.0) is not None
+    assert t.max_abs_error() <= t.err_seg + 1e-6
+
+
+def test_splice_run_payload_guards():
+    clustered = FITingTree(np.arange(20.0), error=8, assume_sorted=True)
+    with pytest.raises(ValueError, match="clustered"):
+        clustered.splice_run(np.array([30.0]), np.array([1]))
+    keyed = FITingTree(np.arange(20.0), error=8,
+                       payload=np.arange(20), assume_sorted=True)
+    with pytest.raises(ValueError, match="payload"):
+        keyed.splice_run(np.array([30.0]))
+
+
+# ----------------------------------------------------------------- rebalancing
+def _skewed_service(seed=11, n=8000, n_shards=4, hot_inserts=3000, **kw):
+    rng = np.random.default_rng(seed)
+    base = np.sort(rng.choice(2 ** 20, size=n, replace=False)).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=n_shards,
+                              buffer_size=16, assume_sorted=True, **kw)
+    hot = _fresh(rng, base, 0, int(svc.boundaries[1]), hot_inserts)
+    return svc, base, hot
+
+
+def test_rebalance_recuts_skewed_shards():
+    """Acceptance: after a skewed insert stream, rebalance brings max/mean
+    keys-per-shard to <= 1.5 and lookups still match the union oracle."""
+    svc, base, hot = _skewed_service(skew_threshold=1.5)
+    for k in hot:
+        svc.insert(float(k))
+    svc.publish()
+    assert svc.imbalance() > 1.5 and svc.needs_rebalance()
+    epochs_before = svc.epochs()
+    info = svc.rebalance()
+    assert info is not None and info["moved_keys"] > 0
+    assert info["imbalance_after"] <= 1.5
+    loads = svc.shard_loads()
+    assert loads.max() / loads.mean() <= 1.5
+    assert svc.shard_set.version == 2
+    assert all(e > b for e, b in zip(svc.epochs(), epochs_before))
+    # boundaries changed and stayed strictly sorted
+    assert np.all(np.diff(svc.boundaries) > 0)
+    union = np.sort(np.concatenate([base, hot]))
+    rng = np.random.default_rng(12)
+    q = np.concatenate([hot[::11], base[::101],
+                        rng.uniform(0, 2 ** 20, size=64)])
+    want = numpy_lookup(SegmentTable.from_keys(union, 64, assume_sorted=True), q)
+    np.testing.assert_array_equal(svc.lookup(q), want)
+    # total keys conserved by the migration
+    assert sum(w.n_keys for w in svc.writers) == union.shape[0]
+
+
+def test_rebalance_noop_when_balanced():
+    svc, *_ = _skewed_service(hot_inserts=1)
+    assert svc.imbalance() < 1.1
+    assert svc.rebalance() is None
+    assert svc.shard_set.version == 1
+    assert svc.service_stats()["rebalances"] == 0
+    assert svc.rebalance(force=True) is not None      # force recuts anyway
+    assert svc.shard_set.version == 2
+
+
+def test_rebalance_moves_payloads_with_keys():
+    rng = np.random.default_rng(21)
+    base = np.sort(rng.choice(2 ** 20, size=4000, replace=False)).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=4, buffer_size=16,
+                              payload=(base * 3).astype(np.int64),
+                              assume_sorted=True)
+    hot = _fresh(rng, base, 0, int(svc.boundaries[1]), 1500)
+    for k in hot:
+        svc.insert(float(k), value=int(k) * 3)
+    svc.publish()
+    assert svc.rebalance(force=True) is not None
+    for probe in np.concatenate([hot[::97], base[::499]]):
+        sid = svc.shard_of(float(probe))
+        hit = svc.writers[sid].lookup(float(probe))
+        assert hit is not None and hit[2] == int(probe) * 3, probe
+
+
+def test_auto_rebalance_triggers_on_publish():
+    svc, base, hot = _skewed_service(seed=13, skew_threshold=1.3,
+                                     auto_rebalance=True, publish_every=512)
+    for k in hot:
+        svc.insert(float(k))
+    svc.publish()
+    stats = svc.service_stats()
+    assert stats["rebalances"] >= 1
+    assert stats["imbalance"] <= 1.3 or not svc.needs_rebalance()
+    union = np.sort(np.concatenate([base, hot]))
+    q = np.concatenate([hot[::13], base[::211]])
+    want = numpy_lookup(SegmentTable.from_keys(union, 64, assume_sorted=True), q)
+    np.testing.assert_array_equal(svc.lookup(q), want)
+
+
+def test_pending_pressure_feeds_skew_detection():
+    svc, base, hot = _skewed_service(seed=14, hot_inserts=600,
+                                     pending_weight=4.0)
+    svc_flat, *_ = _skewed_service(seed=14, hot_inserts=600, pending_weight=0.0)
+    for k in hot[:400]:
+        svc.insert(float(k))
+        svc_flat.insert(float(k))
+    # unpublished pressure counts (scaled) with pending_weight > 0 only
+    assert svc.imbalance() > svc_flat.imbalance()
+    assert svc.shard_loads().sum() == pytest.approx(
+        svc_flat.shard_loads().sum() + 4.0 * 400)
+
+
+def test_rebalance_swap_is_atomic_and_old_view_stays_consistent():
+    """A pinned ShardSet must keep serving its own epoch after a rebalance:
+    same handles, same snapshots, same (old) boundaries."""
+    svc, base, hot = _skewed_service(seed=15)
+    old = svc.shard_set
+    old_snaps = [h.current() for h in old.handles]
+    for k in hot:
+        svc.insert(float(k))
+    svc.publish(shards=[0])
+    assert svc.rebalance(force=True) is not None
+    new = svc.shard_set
+    assert new is not old and new.version == old.version + 1
+    assert new.handles is not old.handles
+    # the retired view is untouched: handles still hold their old snapshots
+    for d, h in enumerate(old.handles):
+        if d != 0:          # shard 0 was republished into the old set above
+            assert h.current() is old_snaps[d]
+    # and a lookup resolved manually against the old view is self-consistent
+    engines = [h.engine("numpy") for h in old.handles]
+    sizes = [e.table.n_keys for e in engines]
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+    q = base[::211]
+    sid = route_keys(old.boundaries, q)
+    for d in np.unique(sid):
+        mask = sid == d
+        local = engines[d].lookup(q[mask])
+        assert np.all(local >= 0)
+        got = local + offsets[d]
+        assert np.all(np.diff(got) > 0)
+
+
+def test_stats_reports_router_cut_and_snapshot_first_key():
+    rng = np.random.default_rng(16)
+    base = np.sort(rng.choice(2 ** 20, size=2000, replace=False) + 1000
+                   ).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=2, buffer_size=8,
+                              assume_sorted=True)
+    s0 = svc.stats()[0]
+    assert s0.boundary == base[0] == s0.snapshot_first_key
+    svc.insert(5.0)                       # below every key: routes to shard 0
+    svc.publish()
+    s0 = svc.stats()[0]
+    assert s0.boundary == base[0]         # the router cut did not move...
+    assert s0.snapshot_first_key == 5.0   # ...but the served data did
+    assert svc.shard_of(5.0) == 0         # and `boundary` is what routes
+    assert s0.version == 1
+    svc.rebalance(force=True)
+    s0 = svc.stats()[0]
+    assert s0.version == 2
+    assert s0.boundary == 5.0 == s0.snapshot_first_key  # recut from the data
+
+
+def test_rebalance_skips_when_recut_cannot_help():
+    """Three giant duplicate runs, one per shard: the duplicate-safe recut of
+    the skewed view reproduces the current cuts, so rebalance must not churn
+    a full republish -- it skips (counted), and only force swaps."""
+    keys = np.repeat(np.array([1.0, 2.0, 3.0]), 40)
+    svc = ShardedIndexService(keys, error=16, n_shards=3, buffer_size=8,
+                              auto_rebalance=True, skew_threshold=1.05,
+                              assume_sorted=True)
+    for _ in range(30):                   # skew shard 2 with duplicates of 3
+        svc.insert(3.0)
+    svc.publish()                         # auto check fires -> skip, no swap
+    assert svc.needs_rebalance()
+    assert svc.service_stats()["rebalance_skipped"] >= 1
+    assert svc.shard_set.version == 1
+    assert svc.rebalance() is None
+    info = svc.rebalance(force=True)      # force swaps even with no movement
+    assert info is not None and info["moved_keys"] == 0
+    assert svc.shard_set.version == 2
+    assert svc.lookup([3.0])[0] == 80     # leftmost rank of the 3.0 run
+
+
+# ------------------------------------------------------------ empty-table path
+def test_empty_table_every_backend_returns_absent():
+    for table in (SegmentTable.empty(16),
+                  SegmentTable.from_keys(np.empty(0), 16)):
+        assert table.n_keys == 0 and table.n_segments == 1
+        q = np.array([0.0, 1.5, 2.0 ** 20])
+        np.testing.assert_array_equal(numpy_lookup(table, q), [-1, -1, -1])
+        for backend in FIVE_BACKENDS:
+            got = np.asarray(make_engine(table, backend).lookup(q))
+            np.testing.assert_array_equal(got, [-1, -1, -1], err_msg=backend)
+
+
+def test_empty_tree_supports_inserts_and_batch_lookup():
+    t = FITingTree(np.empty(0), error=16, buffer_size=4)
+    assert t.n_keys == 0
+    assert t.lookup(1.0) is None
+    assert t.lookup_batch(np.array([1.0])).tolist() == [-1]
+    assert t.range_query(0.0, 10.0).shape[0] == 0
+    for k in (5.0, 1.0, 9.0, 3.0, 2.0):
+        t.insert(k)
+    t.flush()
+    assert t.n_keys == 5
+    assert t.max_abs_error() <= t.err_seg + 1e-6
+    np.testing.assert_array_equal(t.lookup_batch(np.array([1.0, 3.0, 9.0])),
+                                  [0, 2, 4])
+
+
+# --------------------------------------------- pack_shard_tables empty shards
+def test_pack_empty_interior_shard_inherits_next_boundary():
+    mk = lambda lo, hi: SegmentTable.from_keys(np.arange(lo, hi, dtype=float),
+                                               4, assume_sorted=True)
+    tables = [mk(0, 10), SegmentTable.empty(4), mk(20, 30)]
+    packed = pack_shard_tables(tables)
+    np.testing.assert_array_equal(packed.boundaries, [0.0, 20.0, 20.0])
+    assert np.all(np.diff(packed.boundaries) >= 0)  # route_keys precondition
+    # routing: a query at the inherited boundary goes to the non-empty owner
+    assert int(route_keys(packed.boundaries, 20.0)) == 2
+    assert int(route_keys(packed.boundaries, 5.0)) == 0
+    # trailing empty shards keep +inf (never routed to)
+    packed2 = pack_shard_tables([mk(0, 10), SegmentTable.empty(4)])
+    assert packed2.boundaries[0] == 0.0 and np.isinf(packed2.boundaries[1])
+    assert int(route_keys(packed2.boundaries, 1e12)) == 0
+
+
+# ------------------------------------------------- concurrency (writer/reader)
+@pytest.mark.slow
+def test_reader_never_observes_half_swapped_shard_set():
+    """Satellite: auto-publish (publish_every) + auto-rebalance firing
+    mid-insert-stream while a reader thread hammers lookups.  Any torn
+    boundaries/handles/offsets view would surface as a present key reported
+    absent or as non-monototic global ranks for sorted distinct queries."""
+    rng = np.random.default_rng(17)
+    base = np.sort(rng.choice(2 ** 20, size=12_000, replace=False)
+                   ).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=4, buffer_size=32,
+                              publish_every=256, auto_rebalance=True,
+                              skew_threshold=1.2, assume_sorted=True)
+    hot = _fresh(rng, base, 0, int(svc.boundaries[1]), 6000)
+    sample = base[::37]                     # sorted, distinct, always present
+    failures: list[str] = []
+    done = threading.Event()
+
+    def reader():
+        while not done.is_set():
+            ranks = svc.lookup(sample)
+            if np.any(ranks < 0):
+                failures.append(f"present key reported absent: "
+                                f"{sample[ranks < 0][:4]}")
+                return
+            if np.any(np.diff(ranks) <= 0):
+                failures.append("non-monotonic global ranks (torn view)")
+                return
+
+    def writer():
+        for k in hot:
+            svc.insert(float(k))
+        svc.publish()
+
+    r = threading.Thread(target=reader)
+    w = threading.Thread(target=writer)
+    r.start(); w.start()
+    w.join(timeout=120)
+    done.set()
+    r.join(timeout=30)
+    assert not failures, failures
+    assert svc.service_stats()["rebalances"] >= 1   # the race actually ran
+    union = np.sort(np.concatenate([base, hot]))
+    q = np.concatenate([hot[::29], sample])
+    want = numpy_lookup(SegmentTable.from_keys(union, 64, assume_sorted=True), q)
+    np.testing.assert_array_equal(svc.lookup(q), want)
