@@ -1,0 +1,110 @@
+"""Planner quality: does the Sec. 6 plan predict what the built index does?
+
+Two claims are tracked per PR (wired into ``benchmarks/smoke.py``):
+
+1. **Prediction accuracy across the error sweep** -- for every candidate
+   error the planner scored, build the index at that error and measure the
+   host lookup latency; record measured vs the plan's predicted latency and
+   size (the Fig. 10 methodology, but through the ``FitSpec -> plan()``
+   audit trail instead of hand-rolled model calls).
+
+2. **Planned vs default dispatch thresholds head-to-head** -- run the same
+   mixed batch-size workload through a ``DispatchEngine`` with the
+   cost-model-planned ``small_max``/``large_min`` and one pinned to the old
+   magic constants (64 / 4096); record total time per configuration so the
+   artifact shows whether the learned crossings actually help on this host.
+
+Results land in ``out/bench_plan.json`` plus the usual ``emit`` lines.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.datasets import weblogs_like
+from repro.index import FitSpec, make_engine, plan
+from repro.index.fit import planned_buffer
+from repro.index.table import SegmentTable
+
+from .common import emit, timeit, write_json
+
+N = 200_000
+NQ = 4_096
+CANDIDATES = (16, 64, 256, 1024, 4096)
+BATCH_SIZES = (1, 4, 16, 64, 256, 1024)
+LEGACY_THRESHOLDS = (64, 4096)   # the pre-planner magic constants
+
+
+def run(n: int = N, n_queries: int = NQ,
+        candidates: tuple[int, ...] = CANDIDATES,
+        batch_sizes: tuple[int, ...] = BATCH_SIZES,
+        latency_budget_ns: float = 800.0):
+    keys = weblogs_like(n)
+    rng = np.random.default_rng(11)
+    q = keys[rng.integers(0, n, size=n_queries)]
+
+    spec = FitSpec(latency_budget_ns=latency_budget_ns,
+                   candidate_errors=candidates, segment_sample=None)
+    p = plan(keys, spec)
+    results = {"config": {"n": n, "n_queries": n_queries,
+                          "candidates": list(candidates),
+                          "batch_sizes": list(batch_sizes),
+                          "latency_budget_ns": latency_budget_ns},
+               "plan": {"error": p.error, "n_shards": p.n_shards,
+                        "backend": p.backend, "small_max": p.small_max,
+                        "large_min": p.large_min}}
+
+    # --- 1. predicted vs measured across the candidate sweep (each candidate
+    # built as the plan scores it: segmented at err_seg = error - buffer, the
+    # form a published snapshot serves)
+    sweep = []
+    for c in p.candidates:
+        eff_error = max(1, c.error - planned_buffer(c.error))
+        table = SegmentTable.from_keys(keys, eff_error, assume_sorted=True)
+        eng = make_engine(table, "numpy")
+        measured_ns = timeit(eng.lookup, q) / n_queries * 1e9
+        sweep.append({"error": c.error, "chosen": c.chosen,
+                      "predicted_ns": c.latency_ns,
+                      "measured_ns": measured_ns,
+                      "predicted_bytes": c.size_bytes,
+                      "actual_bytes": table.size_bytes()})
+    results["error_sweep"] = sweep
+    ub_lat = float(np.mean([r["predicted_ns"] >= r["measured_ns"]
+                            for r in sweep]))
+    ub_sz = float(np.mean([r["predicted_bytes"] >= r["actual_bytes"]
+                           for r in sweep]))
+    emit("plan", "latency_upper_bound_rate", ub_lat)
+    emit("plan", "size_upper_bound_rate", ub_sz)
+    results["latency_upper_bound_rate"] = ub_lat
+    results["size_upper_bound_rate"] = ub_sz
+
+    # --- 2. planned vs legacy-default dispatch thresholds, same workload
+    table = SegmentTable.from_keys(keys, max(1, p.error - p.buffer_size),
+                                   assume_sorted=True)
+    head_to_head = {}
+    for name, (small_max, large_min) in (
+            ("planned", (p.small_max, p.large_min)),
+            ("legacy_default", LEGACY_THRESHOLDS)):
+        eng = make_engine(table, "dispatch", small_max=small_max,
+                          large_min=large_min)
+        for size in batch_sizes:             # warm every tier's compile cache
+            eng.lookup(q[:size])
+
+        def workload(eng=eng):
+            for size in batch_sizes:
+                eng.lookup(q[:size])
+
+        total_s = timeit(workload)
+        head_to_head[name] = {
+            "small_max": small_max, "large_min": large_min,
+            "total_ms": total_s * 1e3,
+            "tiers": {str(s): eng.backend_for(s) for s in batch_sizes}}
+        emit("plan", f"dispatch_total_ms_{name}", total_s * 1e3,
+             f"small_max={small_max},large_min={large_min}")
+    results["dispatch_head_to_head"] = head_to_head
+
+    write_json("bench_plan", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,8 @@ import argparse
 import platform
 import time
 
-from . import bench_insert, bench_lookup, bench_rebalance, bench_sharded
+from . import (bench_insert, bench_lookup, bench_plan, bench_rebalance,
+               bench_sharded)
 from .common import write_json
 
 TINY = {
@@ -32,6 +33,11 @@ TINY = {
     "rebalance": (bench_rebalance.run,
                   dict(n=20_000, n_inserts=2_000, n_queries=1_024,
                        n_shards=4, publish_every=256, skew_threshold=1.1)),
+    # planner quality: predicted-vs-measured across the error sweep plus
+    # planned-vs-legacy dispatch thresholds on a mixed batch-size workload
+    "plan": (bench_plan.run,
+             dict(n=20_000, n_queries=512, candidates=(16, 64, 256, 1024),
+                  batch_sizes=(1, 8, 64, 512))),
 }
 
 

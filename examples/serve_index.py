@@ -1,4 +1,15 @@
-"""Serving the paper's index through the unified core (repro.index):
+"""Serving the paper's index through the unified core (repro.index).
+
+The SLO-driven path (Sec. 6 -- the paper's actual user contract) is three
+lines; no error / shard count / threshold picked by hand:
+
+    spec = FitSpec(latency_budget_ns=500.0)     # or storage_budget_bytes=...
+    svc = open_index(keys, spec)                # cost model resolves the rest
+    svc.insert(k); svc.publish(); svc.lookup(q)
+
+``plan(keys, spec).explain()`` shows the predicted latency/size of every
+candidate error before anything is built.  Everything below the SLO demo is
+the expert raw-knob path:
 
   * one `SegmentTable`, every engine backend (numpy / xla-window / xla-bisect
     / pallas / dispatch) checked against the oracle and timed;
@@ -44,6 +55,9 @@ Backend-dispatch knobs (``backend="dispatch"``, see
     no device round trip for tiny point probes.
   * ``large_min`` -- batches at least this size take the Pallas plan/
     bucketing kernel (``pallas``); in between, the XLA bisect path wins.
+  * both default to the cost-model crossings for the table's error and
+    segment count (``repro.core.cost_model.dispatch_thresholds``); a plan
+    pins them explicitly, and hand-set values override everything.
   * per-tier engines are overridable (``small=``/``medium=``/``large=``) and
     receive ``engine_opts[backend]`` kwargs, e.g. the Pallas bucket capacity.
 """
@@ -54,9 +68,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index import SegmentTable, available_backends, make_engine
+from repro.index import SegmentTable, available_backends, make_engine, plan
 from repro.kernels.ref import lookup_ref
-from repro.serve import IndexService, ShardedIndexService
+from repro.serve import (FitSpec, IndexService, ShardedIndexService,
+                         open_index)
 
 
 def main():
@@ -64,6 +79,8 @@ def main():
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--queries", type=int, default=4096)
     ap.add_argument("--error", type=int, default=64)
+    ap.add_argument("--latency-ns", type=float, default=600.0,
+                    help="lookup SLO for the FitSpec demo")
     ap.add_argument("--inserts", type=int, default=2000)
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--skew-threshold", type=float, default=1.5)
@@ -73,6 +90,21 @@ def main():
     rng = np.random.default_rng(0)
     keys = np.sort(rng.choice(2 ** 23, size=args.n, replace=False)).astype(
         np.float64)
+
+    # --- the SLO-driven path: declare the budget, let Sec. 6 pick the knobs
+    spec = FitSpec(latency_budget_ns=args.latency_ns)
+    resolved = plan(keys, spec)          # review it, then build from it
+    print(resolved.explain())
+    svc = open_index(keys, resolved)
+    probe = float(keys[0]) - 1.0
+    svc.insert(probe)
+    svc.publish()
+    assert svc.lookup(np.array([probe]))[0] == 0
+    print(f"  open_index: {type(svc).__name__} serving error="
+          f"{svc.plan.error} (no knob hand-picked); insert -> publish -> "
+          f"lookup OK\n")
+
+    # --- expert raw-knob path from here down
     q = jnp.asarray(keys[rng.integers(0, args.n, args.queries)], jnp.float32)
     table = SegmentTable.from_keys(keys, args.error, assume_sorted=True)
 

@@ -8,8 +8,9 @@ from .segmentation import (Segments, max_segments_bound, optimal_segmentation,
                            shrinking_cone, shrinking_cone_py, verify_segments)
 from .tree import FITingTree, PackedRouter
 from .cost_model import (CostParams, TPUCostParams, choose_error_for_latency,
-                         choose_error_for_space, latency_ns, latency_ns_tpu,
-                         learn_segments_fn, size_bytes)
+                         choose_error_for_space, dispatch_thresholds,
+                         latency_ns, latency_ns_tpu, learn_segments_fn,
+                         size_bytes, tier_cost_curves)
 from . import datasets
 
 _JAX_INDEX_NAMES = {"DeviceIndex", "build_device_index", "lookup",
@@ -20,6 +21,7 @@ __all__ = [
     "verify_segments", "max_segments_bound", "FITingTree", "PackedRouter",
     "CostParams", "TPUCostParams", "latency_ns", "latency_ns_tpu", "size_bytes",
     "learn_segments_fn", "choose_error_for_latency", "choose_error_for_space",
+    "dispatch_thresholds", "tier_cost_curves",
     "datasets", *sorted(_JAX_INDEX_NAMES),
 ]
 

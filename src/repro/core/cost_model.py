@@ -30,6 +30,8 @@ class TPUCostParams:
     dma_setup_ns: float = 600.0   # fixed DMA issue latency
     vmem_step_ns: float = 3.0     # per router level probe in VMEM
     bytes_per_key: int = 8
+    launch_ns: float = 25_000.0   # host->device dispatch of one jitted call
+    plan_ns: float = 75_000.0     # Pallas prelude: bucketing argsort + scatter
 
 
 def latency_ns(error: int, n_segments: int, p: CostParams) -> float:
@@ -49,10 +51,17 @@ def size_bytes(error: int, n_segments: int, p: CostParams) -> float:
     return p.fill * s * max(1.0, math.log(s, p.fanout)) * 16.0 + s * 24.0
 
 
+# VMEM router fanout on device (v5e: one 16-wide vector compare per level);
+# shared by latency_ns_tpu and tier_cost_curves so the planner's candidate
+# scoring and its dispatch-threshold crossings use the same router model.
+TPU_ROUTER_FANOUT = 16
+
+
 def latency_ns_tpu(error: int, n_segments: int, p: TPUCostParams,
                    router_levels: int | None = None) -> float:
     """TPU adaptation: router probes in VMEM + one window DMA from HBM."""
-    levels = router_levels or max(1, math.ceil(math.log(max(n_segments, 2), 16)))
+    levels = router_levels or max(1, math.ceil(
+        math.log(max(n_segments, 2), TPU_ROUTER_FANOUT)))
     window_bytes = (2 * error + 2) * p.bytes_per_key
     return p.dma_setup_ns + levels * p.vmem_step_ns + window_bytes / p.hbm_gbps
 
@@ -81,12 +90,19 @@ def learn_segments_fn(keys: np.ndarray, errors: Sequence[int],
 
 
 def choose_error_for_latency(l_req_ns: float, segments_fn: Callable[[int], int],
-                             candidates: Sequence[int], p: CostParams) -> int | None:
-    """Sec. 6.1 Eq. (2): smallest-size index meeting the latency requirement."""
+                             candidates: Sequence[int], p: CostParams,
+                             latency_fn: Callable[[int, int], float] | None = None
+                             ) -> int | None:
+    """Sec. 6.1 Eq. (2): smallest-size index meeting the latency requirement.
+
+    ``latency_fn(error, n_segments)`` substitutes a different latency model
+    (e.g. the TPU roofline :func:`latency_ns_tpu`) while the size side stays
+    the paper's Eq. 1 metadata accounting; ``None`` means the paper model."""
+    lat = latency_fn or (lambda e, s: latency_ns(e, s, p))
     best, best_size = None, float("inf")
     for e in candidates:
         s = segments_fn(e)
-        if latency_ns(e, s, p) <= l_req_ns:
+        if lat(e, s) <= l_req_ns:
             sz = size_bytes(e, s, p)
             if sz < best_size:
                 best, best_size = e, sz
@@ -94,13 +110,83 @@ def choose_error_for_latency(l_req_ns: float, segments_fn: Callable[[int], int],
 
 
 def choose_error_for_space(s_req_bytes: float, segments_fn: Callable[[int], int],
-                           candidates: Sequence[int], p: CostParams) -> int | None:
-    """Sec. 6.2 Eq. (2): fastest index within the storage budget."""
+                           candidates: Sequence[int], p: CostParams,
+                           latency_fn: Callable[[int, int], float] | None = None
+                           ) -> int | None:
+    """Sec. 6.2 Eq. (2): fastest index within the storage budget.
+
+    ``latency_fn`` as in :func:`choose_error_for_latency`."""
+    lat = latency_fn or (lambda e, s: latency_ns(e, s, p))
     best, best_lat = None, float("inf")
     for e in candidates:
         s = segments_fn(e)
         if size_bytes(e, s, p) <= s_req_bytes:
-            lat = latency_ns(e, s, p)
-            if lat < best_lat:
-                best, best_lat = e, lat
+            l = lat(e, s)
+            if l < best_lat:
+                best, best_lat = e, l
     return best
+
+
+# ------------------------------------------------------- dispatch tier curves
+def tier_cost_curves(error: int, n_segments: int,
+                     cpu: CostParams | None = None,
+                     tpu: TPUCostParams | None = None
+                     ) -> dict[str, tuple[float, float]]:
+    """Modeled batched-lookup cost per dispatch tier: ``{tier: (fixed_ns,
+    per_query_ns)}`` so a batch of ``n`` queries costs ``fixed + n * per``.
+
+    The three tiers of ``repro.index.engine.DispatchEngine`` trade fixed cost
+    against marginal cost, and both sides come from the Sec. 6 models:
+
+    * ``small`` (host numpy): no dispatch cost; each query pays the paper's
+      Eq. 1 host latency (:func:`latency_ns`) minus its buffer-scan term --
+      the dispatch tiers serve a *published snapshot*, whose lookups never
+      touch write-side insert buffers.
+    * ``medium`` (xla-bisect): one device launch plus the DMA issue latency
+      up front; each query then pays ``log2(2e+2)`` single-element probes at
+      VMEM speed (the bisect touches one key per halving step).
+    * ``large`` (pallas): the launch plus the plan/bucketing prelude up
+      front; each query's +-error window is then streamed through the
+      compare-reduce kernel at HBM bandwidth.
+    """
+    cpu = cpu or CostParams()
+    tpu = tpu or TPUCostParams()
+    steps = math.ceil(math.log2(2 * max(error, 1) + 2))
+    window_bytes = (2 * error + 2) * tpu.bytes_per_key
+    levels = max(1, math.ceil(
+        math.log(max(n_segments, 2), TPU_ROUTER_FANOUT)))
+    host_ns = (latency_ns(error, n_segments, cpu)
+               - cpu.c_ns * math.log2(max(cpu.buffer_size, 2)))
+    return {
+        "small": (0.0, host_ns),
+        "medium": (tpu.launch_ns + tpu.dma_setup_ns,
+                   steps * tpu.vmem_step_ns + levels * tpu.vmem_step_ns),
+        "large": (tpu.launch_ns + tpu.dma_setup_ns + tpu.plan_ns,
+                  window_bytes / tpu.hbm_gbps + tpu.vmem_step_ns),
+    }
+
+
+def dispatch_thresholds(error: int, n_segments: int,
+                        cpu: CostParams | None = None,
+                        tpu: TPUCostParams | None = None) -> tuple[int, int]:
+    """Cost-model-calibrated ``(small_max, large_min)`` for ``DispatchEngine``:
+    the batch sizes where the modeled per-tier latency curves cross.
+
+    ``small_max`` is the largest batch the host tier still wins (the medium
+    tier's fixed launch cost amortizes beyond it); ``large_min`` the smallest
+    batch where the Pallas tier's extra plan cost pays for its lower marginal
+    cost.  Degenerate slopes (a tier whose marginal cost is not strictly
+    better than its predecessor's) push the crossing to the extreme, so the
+    invariant ``0 <= small_max < large_min`` always holds."""
+    curves = tier_cost_curves(error, n_segments, cpu, tpu)
+    (f_s, p_s), (f_m, p_m), (f_l, p_l) = (
+        curves["small"], curves["medium"], curves["large"])
+    if p_s > p_m:
+        small_max = max(1, int((f_m - f_s) / (p_s - p_m)))
+    else:                  # host never loses per-query: keep batches on host
+        small_max = 1 << 30
+    if p_m > p_l:
+        large_min = max(small_max + 1, int(math.ceil((f_l - f_m) / (p_m - p_l))))
+    else:                  # pallas never wins per-query: effectively disabled
+        large_min = max(small_max + 1, 1 << 31)
+    return small_max, large_min

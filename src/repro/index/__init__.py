@@ -1,19 +1,29 @@
 """Canonical index core: one segment table, one router, one engine per backend.
 
+The front door is declarative (SLO-driven, see ``fit.py``): write a
+``FitSpec`` -- a latency budget, a storage budget, or an expert-pinned
+error, plus workload hints -- and ``open_index(keys, spec)`` resolves it
+through the Sec. 6 cost model into a ready-to-serve ``IndexService`` or
+``ShardedIndexService``; ``plan(keys, spec)`` exposes the intermediate
+``IndexPlan`` (with an ``explain()`` audit trail) for review first.
+
 Module map (see ROADMAP.md):
   table.py    -- immutable ``SegmentTable`` + ``route_keys`` (THE router) +
                  the shard partition (``shard_boundaries``/``shard_partition``);
                  numpy-only, shared by every layer
   engine.py   -- ``LookupEngine`` registry: numpy / xla-window / xla-bisect /
                  pallas bounded-window search, ``DeviceIndex`` device form,
-                 and ``DispatchEngine`` (batch-size-aware tier routing)
+                 and ``DispatchEngine`` (batch-size-aware tier routing with
+                 cost-model-derived default thresholds)
   snapshot.py -- epoch publishing: Alg. 4 inserts -> ``publish()`` ->
                  ``ServingHandle`` atomic swap into serving
   sharded.py  -- ``ShardedIndexService``: N key-partitioned writers with
                  per-shard epoch streams; ``pack_shard_tables`` device bridge
+  fit.py      -- ``FitSpec`` -> ``plan()`` -> ``IndexPlan`` -> ``open_index``:
+                 the Sec. 6 cost model resolving SLOs into every knob above
 
-``table`` is imported eagerly (pure numpy); the engine/snapshot/sharded names
-are resolved lazily (PEP 562) so host-only code -- including the tree's
+``table`` is imported eagerly (pure numpy); the engine/snapshot/sharded/fit
+names are resolved lazily (PEP 562) so host-only code -- including the tree's
 ``from repro.index.table import ...`` -- never pulls in jax.
 """
 from .table import (SegmentTable, build_shard_tables, numpy_lookup,
@@ -29,11 +39,14 @@ _ENGINE_NAMES = {
 _SNAPSHOT_NAMES = {"ServingHandle", "Snapshot", "SnapshotPublisher"}
 _SHARDED_NAMES = {"PackedShardTables", "ShardSet", "ShardStats",
                   "ShardedIndexService", "pack_shard_tables"}
+_FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
+              "open_index", "plan"}
 
 __all__ = [
     "SegmentTable", "build_shard_tables", "numpy_lookup", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
+    *sorted(_FIT_NAMES),
 ]
 
 
@@ -47,4 +60,7 @@ def __getattr__(name):
     if name in _SHARDED_NAMES:
         from . import sharded
         return getattr(sharded, name)
+    if name in _FIT_NAMES:
+        from . import fit
+        return getattr(fit, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -314,12 +314,27 @@ class DispatchEngine:
     this engine (i.e. of the snapshot), so a serving handle swap retires them
     together with the table.  Every tier returns identical ranks for exact-f32
     workloads (see the module docstring), so dispatch is semantics-preserving.
+
+    ``small_max``/``large_min`` default to ``None``: the thresholds are then
+    derived from the Sec. 6 cost model for *this table's* error and segment
+    count (:func:`repro.core.cost_model.dispatch_thresholds` -- the batch
+    sizes where the modeled per-tier latency curves cross), so the breakpoints
+    track the data instead of being magic constants.  Pass explicit values to
+    pin them (e.g. from a measured sweep or an ``IndexPlan``).
     """
 
-    def __init__(self, table: SegmentTable, *, small_max: int = 64,
-                 large_min: int = 4096, small: str = "numpy",
+    def __init__(self, table: SegmentTable, *, small_max: int | None = None,
+                 large_min: int | None = None, small: str = "numpy",
                  medium: str = "xla-bisect", large: str = "pallas",
                  engine_opts: dict[str, dict] | None = None):
+        if small_max is None and large_min is None:
+            # lazy: keep jax-module import light; cost_model is numpy-only
+            from repro.core.cost_model import dispatch_thresholds
+            small_max, large_min = dispatch_thresholds(table.error,
+                                                       table.n_segments)
+        if small_max is None or large_min is None:
+            raise ValueError("pass both small_max and large_min, or neither "
+                             "(None defers both to the cost model)")
         if not 0 <= small_max < large_min:
             raise ValueError(f"need 0 <= small_max < large_min, got "
                              f"{small_max=} {large_min=}")

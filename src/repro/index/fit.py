@@ -1,0 +1,573 @@
+"""Declarative SLO-driven index construction: ``FitSpec`` -> ``IndexPlan`` ->
+:func:`open_index`.
+
+The paper's headline knob is *not* ``error`` -- it is the SLO (Sec. 6): "a
+cost model that helps determine an appropriate error parameter given either
+(1) a lookup latency requirement (e.g., 500ns) or (2) a storage budget
+(e.g., 100MB)".  This module makes that the front door of the library.
+Instead of hand-picking ``error``, shard counts, and dispatch thresholds, a
+caller writes down what they *want*:
+
+    spec = FitSpec(latency_budget_ns=500.0)          # or storage_budget_bytes
+    svc = open_index(keys, spec)                     # IndexService or sharded
+    svc.insert(k); svc.publish(); svc.lookup(q)
+
+and the planner resolves it through the Sec. 6 cost model
+(:func:`repro.core.cost_model.learn_segments_fn` +
+``choose_error_for_latency``/``choose_error_for_space``) into a concrete,
+auditable :class:`IndexPlan`: the error parameter, the shard count (from
+insert-rate and key-count heuristics), the default engine backend (from the
+expected batch-size distribution), and the cost-model-calibrated
+``DispatchEngine`` tier thresholds (:func:`repro.core.cost_model.
+dispatch_thresholds` -- the batch sizes where the modeled per-tier latency
+curves cross).  ``IndexPlan.explain()`` reports the predicted latency/size of
+every candidate error so the choice can be reviewed before anything is built.
+
+The split is deliberate: ``plan()`` is pure (numpy + the cost model, no jax,
+no construction), so a plan can be computed offline from a key sample,
+serialized alongside the spec (``FitSpec.to_json``), and reviewed; only
+:func:`open_index` builds serving state.  Both ``IndexService`` and
+``ShardedIndexService`` also accept a plan directly (``from_plan`` /
+``plan=``), and their raw-knob constructors now delegate through a trivially
+resolved plan, so "what configuration is this service actually running?" has
+one answer: ``svc.plan``.
+
+An infeasible budget raises :class:`InfeasibleSpecError` naming the tightest
+achievable value instead of silently degrading.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+
+from repro.core.cost_model import (CostParams, TPUCostParams,
+                                   choose_error_for_latency,
+                                   choose_error_for_space,
+                                   dispatch_thresholds, latency_ns,
+                                   latency_ns_tpu, learn_segments_fn,
+                                   size_bytes)
+
+# Default error sweep: the paper's Sec. 7 evaluation range (powers of two so
+# learn_segments_fn interpolates log-log between measured segmentations).
+DEFAULT_CANDIDATE_ERRORS: tuple[int, ...] = (
+    8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384)
+
+# Shard-count heuristics (plan() docstring explains both):
+_SHARD_TARGET_KEYS = 2_000_000       # per-shard publish stays tens of ms
+_SHARD_TARGET_INSERTS_PER_S = 50_000  # one writer absorbs this much traffic
+_MAX_PLANNED_SHARDS = 64
+
+
+class InfeasibleSpecError(ValueError):
+    """No candidate error satisfies the spec's budget.
+
+    Carries the objective (``"latency"`` / ``"space"``), the requested
+    budget, and the tightest achievable value over the candidate sweep so
+    callers can relax the spec programmatically."""
+
+    def __init__(self, objective: str, budget: float, tightest: float,
+                 unit: str):
+        self.objective = objective
+        self.budget = budget
+        self.tightest = tightest
+        super().__init__(
+            f"no candidate error satisfies the {objective} budget "
+            f"{budget:g} {unit}; the tightest achievable {objective} over "
+            f"the candidate sweep is {tightest:g} {unit} -- relax the "
+            f"budget to at least that, widen candidate_errors, or switch "
+            f"objective")
+
+
+@dataclasses.dataclass(frozen=True)
+class FitSpec:
+    """What the caller wants from the index, not how to build it.
+
+    Exactly one of the three objectives must be set:
+
+    * ``latency_budget_ns`` -- Sec. 6.1: the smallest index meeting this
+      per-lookup latency requirement.
+    * ``storage_budget_bytes`` -- Sec. 6.2: the fastest index whose segment
+      metadata fits this budget.
+    * ``error`` -- expert escape hatch: pin the error parameter directly
+      (the planner still resolves shards/backend/thresholds around it).
+
+    Workload hints (all optional) steer the rest of the plan:
+
+    * ``batch_sizes`` -- a sample of expected lookup batch sizes; picks the
+      default backend (all-small -> numpy, all-large -> pallas, mixed ->
+      dispatch).
+    * ``insert_rate`` -- expected inserts/second; drives the shard count
+      (independent per-shard epoch streams absorb write traffic) and the
+      auto-publish cadence.
+    * ``duplicate_density`` -- expected fraction of duplicated keys in
+      [0, 1); caps the shard count (duplicate-safe cuts need at least one
+      distinct key run per shard).
+    * ``key_sample`` -- a representative key sample, so a plan can be
+      computed (and the spec shipped in a config file) before the full key
+      set exists; ``plan(None, spec)`` uses it.  ``n_keys_hint`` scales the
+      sample back up to the production key count for the shard heuristic.
+
+    ``hardware`` selects the latency model: ``"cpu"`` is the paper's Eq. 1
+    cache-miss model (:class:`CostParams`), ``"tpu"`` the roofline DMA model
+    (:class:`TPUCostParams`); the matching params field overrides the
+    defaults.  ``to_json``/``from_json`` round-trip the whole spec for
+    config-file-driven serving.
+    """
+
+    latency_budget_ns: float | None = None
+    storage_budget_bytes: float | None = None
+    error: int | None = None
+    # workload hints
+    batch_sizes: tuple[int, ...] | None = None
+    insert_rate: float = 0.0
+    duplicate_density: float = 0.0
+    key_sample: tuple[float, ...] | None = None
+    n_keys_hint: int | None = None
+    # hardware profile
+    hardware: str = "cpu"
+    cpu_params: CostParams = CostParams()
+    tpu_params: TPUCostParams = TPUCostParams()
+    # planner knobs
+    candidate_errors: tuple[int, ...] = DEFAULT_CANDIDATE_ERRORS
+    segment_sample: int | None = 200_000
+
+    def __post_init__(self):
+        objectives = {"latency_budget_ns": self.latency_budget_ns,
+                      "storage_budget_bytes": self.storage_budget_bytes,
+                      "error": self.error}
+        set_names = [k for k, v in objectives.items() if v is not None]
+        if len(set_names) != 1:
+            given = ", ".join(set_names) if set_names else "none"
+            raise ValueError(
+                "FitSpec needs exactly one objective: pass latency_budget_ns"
+                " (a lookup SLO, e.g. 500.0), OR storage_budget_bytes (an "
+                "index size budget, e.g. 100e6), OR error (expert: pin the "
+                f"paper's error parameter); got {given}")
+        if self.latency_budget_ns is not None and self.latency_budget_ns <= 0:
+            raise ValueError(f"latency_budget_ns must be > 0, got "
+                             f"{self.latency_budget_ns!r} (it is a per-lookup"
+                             " budget in nanoseconds)")
+        if self.storage_budget_bytes is not None \
+                and self.storage_budget_bytes <= 0:
+            raise ValueError(f"storage_budget_bytes must be > 0, got "
+                             f"{self.storage_budget_bytes!r} (it is an index-"
+                             "metadata budget in bytes)")
+        if self.error is not None and self.error < 1:
+            raise ValueError(f"error must be >= 1, got {self.error!r}")
+        if self.insert_rate < 0:
+            raise ValueError(f"insert_rate must be >= 0, got "
+                             f"{self.insert_rate!r}")
+        if not 0.0 <= self.duplicate_density < 1.0:
+            raise ValueError(f"duplicate_density must be in [0, 1), got "
+                             f"{self.duplicate_density!r}")
+        if self.key_sample is not None and len(self.key_sample) == 0:
+            raise ValueError("key_sample must be non-empty when given (pass "
+                             "None to require keys at plan time)")
+        if self.batch_sizes is not None and (
+                len(self.batch_sizes) == 0
+                or any(b < 1 for b in self.batch_sizes)):
+            raise ValueError("batch_sizes must be a non-empty sequence of "
+                             f"positive batch sizes, got {self.batch_sizes!r}")
+        if self.hardware not in ("cpu", "tpu"):
+            raise ValueError(f"hardware must be 'cpu' or 'tpu', got "
+                             f"{self.hardware!r}")
+        if len(self.candidate_errors) == 0 \
+                or any(e < 1 for e in self.candidate_errors):
+            raise ValueError("candidate_errors must be a non-empty sequence "
+                             "of errors >= 1")
+        if self.segment_sample is not None and self.segment_sample < 1:
+            raise ValueError(f"segment_sample must be >= 1 (or None for the "
+                             f"full key set), got {self.segment_sample!r}")
+        # normalize sequence fields to tuples of plain Python scalars (numpy
+        # arrays and np.int64/np.float64 elements are natural inputs here)
+        # so to_json never trips on non-serializable types and
+        # from_json(to_json(s)) == s holds structurally
+        if self.batch_sizes is not None:
+            object.__setattr__(self, "batch_sizes",
+                               tuple(int(b) for b in self.batch_sizes))
+        if self.key_sample is not None:
+            object.__setattr__(self, "key_sample",
+                               tuple(float(k) for k in self.key_sample))
+        object.__setattr__(self, "candidate_errors",
+                           tuple(int(e) for e in self.candidate_errors))
+
+    # ---------------------------------------------------------- serialization
+    def to_json(self) -> str:
+        """Serialize for config files; ``from_json`` restores an equal spec."""
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FitSpec":
+        d = json.loads(text)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown FitSpec fields in JSON: "
+                            f"{sorted(unknown)}")
+        for pname, pcls in (("cpu_params", CostParams),
+                            ("tpu_params", TPUCostParams)):
+            if d.get(pname) is not None:
+                pknown = {f.name for f in dataclasses.fields(pcls)}
+                punknown = set(d[pname]) - pknown
+                if punknown:
+                    raise ValueError(f"unknown FitSpec fields in JSON under "
+                                     f"{pname}: {sorted(punknown)}")
+                d[pname] = pcls(**d[pname])
+        for name in ("batch_sizes", "key_sample", "candidate_errors"):
+            if d.get(name) is not None:
+                d[name] = tuple(d[name])
+        return cls(**d)
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def objective(self) -> str:
+        if self.latency_budget_ns is not None:
+            return "latency"
+        if self.storage_budget_bytes is not None:
+            return "space"
+        return "error"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCandidate:
+    """One row of the planner's audit trail: a candidate error's prediction."""
+    error: int
+    n_segments: int
+    latency_ns: float
+    size_bytes: float
+    feasible: bool     # meets the budget (always True for objective="error")
+    chosen: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexPlan:
+    """A fully resolved index configuration -- every knob the constructors
+    need, plus the audit trail that justifies it.
+
+    Produced by :func:`plan` (cost-model resolution of a :class:`FitSpec`)
+    or :meth:`from_knobs` (trivial resolution of raw expert knobs, so the
+    legacy constructors also carry a plan).  ``small_max``/``large_min`` are
+    the dispatch tier thresholds; ``None`` means "let ``DispatchEngine``
+    derive them from the cost model at build time" (the trivial-plan case).
+    """
+
+    error: int
+    n_shards: int = 1
+    buffer_size: int = 0
+    backend: str = "numpy"
+    small_max: int | None = None
+    large_min: int | None = None
+    publish_every: int | None = None
+    # provenance / audit trail
+    objective: str = "raw"           # latency | space | error | raw
+    budget: float | None = None
+    hardware: str = "cpu"
+    n_keys: int = 0                  # keys the plan was computed over
+    candidates: tuple[PlanCandidate, ...] = ()
+    spec: FitSpec | None = None
+
+    def __post_init__(self):
+        if self.error < 1:
+            raise ValueError(f"plan error must be >= 1, got {self.error}")
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if (self.small_max is None) != (self.large_min is None):
+            raise ValueError("small_max and large_min must be set together "
+                             "(or both None to defer to the cost model)")
+
+    @classmethod
+    def from_knobs(cls, error: int, *, n_shards: int = 1, buffer_size: int = 0,
+                   backend: str = "numpy",
+                   publish_every: int | None = None) -> "IndexPlan":
+        """Trivial resolution: wrap raw expert knobs as a plan (no cost-model
+        run; dispatch thresholds stay cost-model-derived at build time)."""
+        return cls(error=int(error), n_shards=int(n_shards),
+                   buffer_size=int(buffer_size), backend=backend,
+                   publish_every=publish_every, objective="raw")
+
+    # ------------------------------------------------------------ constructor
+    def merge_engine_opts(self, engine_opts: dict[str, dict] | None
+                          ) -> dict[str, dict] | None:
+        """Fold the planned dispatch thresholds into ``engine_opts`` (caller-
+        provided opts win; a trivial plan adds nothing)."""
+        if self.small_max is None:
+            return engine_opts
+        opts = {k: dict(v) for k, v in (engine_opts or {}).items()}
+        d = opts.setdefault("dispatch", {})
+        d.setdefault("small_max", self.small_max)
+        d.setdefault("large_min", self.large_min)
+        return opts
+
+    # ------------------------------------------------------------------ audit
+    def explain(self) -> str:
+        """Human-readable report: the chosen configuration and the predicted
+        latency/size of every candidate error (chosen and rejected)."""
+        head = f"IndexPlan: objective={self.objective}"
+        if self.budget is not None:
+            unit = "ns" if self.objective == "latency" else "B"
+            head += f" (budget {self.budget:g} {unit})"
+        head += f", hardware={self.hardware}, planned over {self.n_keys} keys"
+        lines = [
+            head,
+            f"  error={self.error}  n_shards={self.n_shards}  "
+            f"buffer_size={self.buffer_size}  backend={self.backend}  "
+            f"publish_every={self.publish_every}",
+        ]
+        if self.small_max is not None:
+            lines.append(
+                f"  dispatch tiers (cost-model crossings): host <= "
+                f"{self.small_max} < device-bisect < {self.large_min} <= "
+                f"pallas")
+        if self.candidates:
+            lines.append("  candidates (predicted by the Sec. 6 model):")
+            lines.append("    error  segments  latency_ns    size_bytes")
+            for c in self.candidates:
+                mark = "chosen" if c.chosen else (
+                    "" if c.feasible else "infeasible")
+                lines.append(
+                    f"    {c.error:>5d}  {c.n_segments:>8d}  "
+                    f"{c.latency_ns:>10.1f}  {c.size_bytes:>12.0f}  {mark}")
+        return "\n".join(lines)
+
+
+def _resolve_keys(keys, spec: FitSpec, assume_sorted: bool) -> np.ndarray:
+    if keys is not None:
+        arr = np.asarray(keys, np.float64).ravel()
+    elif spec.key_sample is not None:
+        arr = np.asarray(spec.key_sample, np.float64)
+    else:
+        raise ValueError("plan() needs keys (or a FitSpec.key_sample to plan "
+                         "from a representative sample)")
+    if arr.shape[0] == 0:
+        raise ValueError("cannot plan over an empty key set")
+    return arr if assume_sorted else np.sort(arr, kind="stable")
+
+
+def _plan_shards(spec: FitSpec, n_keys: int) -> int:
+    """Shard-count heuristic: enough shards that (a) each holds at most
+    ~_SHARD_TARGET_KEYS (bounds per-shard publish cost) and (b) each absorbs
+    at most ~_SHARD_TARGET_INSERTS_PER_S of the expected write traffic
+    (independent epoch streams keep a write-hot range from blocking reads on
+    the rest); capped by the duplicate-safe cut requirement (>= 1 distinct
+    run per shard) and _MAX_PLANNED_SHARDS."""
+    total = max(n_keys, spec.n_keys_hint or 0)
+    size_shards = math.ceil(total / _SHARD_TARGET_KEYS)
+    write_shards = (math.ceil(spec.insert_rate / _SHARD_TARGET_INSERTS_PER_S)
+                    if spec.insert_rate > 0 else 1)
+    n = max(1, size_shards, write_shards)
+    distinct = max(1, int(total * (1.0 - spec.duplicate_density)))
+    return min(n, distinct, _MAX_PLANNED_SHARDS)
+
+
+def planned_buffer(error: int) -> int:
+    """Per-segment Alg. 4 insert buffer the planner pairs with ``error``: a
+    quarter of the error budget (err_seg = error - buffer keeps the
+    user-visible bound, Sec. 5).  Every planned service is writable when the
+    budget allows it; error=1 leaves no room."""
+    if error < 2:
+        return 0
+    return min(max(2, error // 4), error - 1)
+
+
+def _plan_buffer(spec: FitSpec, error: int) -> int:
+    """The chosen error's buffer, with the write-traffic conflict made loud
+    (an error=1 plan cannot honor a promised insert rate)."""
+    buffer = planned_buffer(error)
+    if buffer == 0 and spec.insert_rate > 0:
+        raise ValueError(
+            "the resolved error=1 leaves no room for an Alg. 4 insert "
+            "buffer (buffer_size < error, Sec. 5), but the spec promises "
+            f"insert_rate={spec.insert_rate:g}/s; relax the budget so a "
+            "larger error is chosen, or drop the insert_rate hint for a "
+            "read-only index")
+    return buffer
+
+
+def _effective_scorers(spec: FitSpec, segments_fn):
+    """Per-candidate ``(eff_segments, eff_latency)`` scoring the
+    configuration :func:`plan` would actually *build*, not the bare error:
+    the insert buffer is carved out of the error budget (Sec. 5), so the
+    tree segments -- and the served snapshot routes and window-searches --
+    at ``err_seg = error - planned_buffer(error)`` (more segments, smaller
+    windows than the bare error), and the paper's buffer-scan term uses the
+    planned buffer.  Snapshot serving never scans write-side buffers during
+    lookups (they are invisible until publish), so that term is pure
+    pessimism: a budget met under this scoring is met by the built index."""
+    def eff_error(e: int) -> int:
+        return max(1, e - planned_buffer(e))
+
+    def eff_segments(e: int) -> int:
+        return segments_fn(eff_error(e))
+
+    if spec.hardware == "tpu":
+        def eff_latency(e: int, s: int) -> float:
+            return latency_ns_tpu(eff_error(e), s, spec.tpu_params)
+    else:
+        def eff_latency(e: int, s: int) -> float:
+            p = dataclasses.replace(spec.cpu_params,
+                                    buffer_size=planned_buffer(e))
+            return latency_ns(eff_error(e), s, p)
+
+    return eff_segments, eff_latency
+
+
+def _plan_backend(spec: FitSpec, small_max: int, large_min: int) -> str:
+    """Default backend from the expected batch-size distribution: a workload
+    living entirely inside one tier skips the dispatch layer."""
+    if not spec.batch_sizes:
+        return "dispatch"
+    lo, hi = min(spec.batch_sizes), max(spec.batch_sizes)
+    if hi <= small_max:
+        return "numpy"
+    if lo >= large_min:
+        return "pallas"
+    if lo > small_max and hi < large_min:
+        return "xla-bisect"
+    return "dispatch"
+
+
+def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
+    """Resolve a :class:`FitSpec` against ``keys`` (or the spec's own
+    ``key_sample``) into a concrete :class:`IndexPlan`.
+
+    Pure planning: learns the error->segments curve for this data
+    (:func:`learn_segments_fn`), scores every candidate error under the
+    spec's hardware latency model, picks the error via the paper's Sec. 6
+    choosers (smallest size meeting a latency budget / fastest within a
+    space budget / pinned), then derives the shard count, insert buffer,
+    default backend, auto-publish cadence, and the cost-model-calibrated
+    dispatch tier thresholds.  Raises :class:`InfeasibleSpecError` (naming
+    the tightest achievable budget) when no candidate fits.
+    ``assume_sorted=True`` skips the sort-copy of ``keys`` (results are
+    garbage if they are not actually sorted).
+    """
+    arr = _resolve_keys(keys, spec, assume_sorted)
+    cands = tuple(sorted(set(int(e) for e in spec.candidate_errors)))
+    if spec.error is not None and spec.error not in cands:
+        cands = tuple(sorted((*cands, int(spec.error))))
+    segments_fn = learn_segments_fn(arr, cands, sample=spec.segment_sample)
+    eff_segments, eff_latency = _effective_scorers(spec, segments_fn)
+    p = spec.cpu_params
+
+    rows = [(e, eff_segments(e)) for e in cands]
+    lats = {e: eff_latency(e, s) for e, s in rows}
+    sizes = {e: size_bytes(e, s, p) for e, s in rows}
+
+    budget: float | None = None
+    if spec.objective == "latency":
+        budget = float(spec.latency_budget_ns)
+        chosen = choose_error_for_latency(budget, eff_segments, cands, p,
+                                          latency_fn=eff_latency)
+        if chosen is None:
+            raise InfeasibleSpecError("latency", budget, min(lats.values()),
+                                      "ns")
+        feasible = {e: lats[e] <= budget for e, _ in rows}
+    elif spec.objective == "space":
+        budget = float(spec.storage_budget_bytes)
+        chosen = choose_error_for_space(budget, eff_segments, cands, p,
+                                        latency_fn=eff_latency)
+        if chosen is None:
+            raise InfeasibleSpecError("space", budget, min(sizes.values()),
+                                      "bytes")
+        feasible = {e: sizes[e] <= budget for e, _ in rows}
+    else:
+        chosen = int(spec.error)
+        feasible = {e: True for e, _ in rows}
+
+    buffer_size = _plan_buffer(spec, chosen)
+    n_segments = eff_segments(chosen)
+    # thresholds for the table the engine will actually see: a published
+    # snapshot carries err_seg as its error (tree.as_table), and
+    # DispatchEngine derives from table.error/n_segments
+    small_max, large_min = dispatch_thresholds(
+        max(1, chosen - buffer_size), n_segments,
+        spec.cpu_params, spec.tpu_params)
+    n_shards = _plan_shards(spec, arr.shape[0])
+    backend = _plan_backend(spec, small_max, large_min)
+    # auto-publish roughly once per second of expected write traffic, kept
+    # inside sane bounds; read-only workloads publish manually
+    publish_every = None
+    if spec.insert_rate > 0 and buffer_size > 0:
+        publish_every = int(min(max(spec.insert_rate, 64), 65_536))
+
+    candidates = tuple(
+        PlanCandidate(error=e, n_segments=s, latency_ns=lats[e],
+                      size_bytes=sizes[e], feasible=feasible[e],
+                      chosen=(e == chosen))
+        for e, s in rows)
+    return IndexPlan(error=chosen, n_shards=n_shards,
+                     buffer_size=buffer_size, backend=backend,
+                     small_max=small_max, large_min=large_min,
+                     publish_every=publish_every, objective=spec.objective,
+                     budget=budget, hardware=spec.hardware,
+                     n_keys=int(arr.shape[0]), candidates=candidates,
+                     spec=spec)
+
+
+def open_index(keys, spec_or_plan: "FitSpec | IndexPlan", *,
+               payload: np.ndarray | None = None, **service_kwargs):
+    """The single SLO-driven entry point: plan (if needed) and build.
+
+    Returns an ``IndexService`` for a one-shard plan, else a
+    ``ShardedIndexService`` -- both ready for the full insert -> publish ->
+    lookup cycle with no raw knob supplied by the caller.  Extra
+    ``service_kwargs`` (e.g. ``skew_threshold``, ``auto_rebalance``,
+    ``mode``) pass through to the service constructor.
+    """
+    if keys is None:
+        raise ValueError("open_index needs the real key array; plan(None, "
+                         "spec) is the offline half that works from a "
+                         "FitSpec.key_sample")
+    if not service_kwargs.get("assume_sorted", False):
+        # sort exactly once here: plan() needs sorted keys and the service
+        # would otherwise re-sort the same array at construction
+        keys = np.asarray(keys, np.float64).ravel()
+        order = np.argsort(keys, kind="stable")
+        keys = keys[order]
+        if payload is not None:
+            payload = np.asarray(payload)[order]
+        service_kwargs["assume_sorted"] = True
+    resolved = (plan(keys, spec_or_plan, assume_sorted=True)
+                if isinstance(spec_or_plan, FitSpec) else spec_or_plan)
+    if not isinstance(resolved, IndexPlan):
+        raise TypeError(f"open_index needs a FitSpec or IndexPlan, got "
+                        f"{type(spec_or_plan).__name__}")
+    # lazy: the services import this module for their plan= constructors
+    if resolved.n_shards > 1:
+        from .sharded import ShardedIndexService
+        return ShardedIndexService.from_plan(keys, resolved, payload=payload,
+                                             **service_kwargs)
+    from repro.serve import IndexService
+    return IndexService.from_plan(keys, resolved, payload=payload,
+                                  **service_kwargs)
+
+
+def brute_force_choice(keys, spec: FitSpec) -> int:
+    """Reference oracle for tests: exhaustively score every candidate with
+    the same models and apply the Sec. 6 selection rule directly (no chooser
+    functions, no interpolation shortcuts beyond the shared segments_fn)."""
+    arr = _resolve_keys(keys, spec, assume_sorted=False)
+    cands = tuple(sorted(set(int(e) for e in spec.candidate_errors)))
+    segments_fn = learn_segments_fn(arr, cands, sample=spec.segment_sample)
+    eff_segments, eff_latency = _effective_scorers(spec, segments_fn)
+    scored = [(e, eff_latency(e, eff_segments(e)),
+               size_bytes(e, eff_segments(e), spec.cpu_params))
+              for e in cands]
+    if spec.objective == "latency":
+        ok = [(sz, e) for e, lat, sz in scored
+              if lat <= spec.latency_budget_ns]
+        if not ok:
+            raise InfeasibleSpecError("latency", spec.latency_budget_ns,
+                                      min(lat for _, lat, _ in scored), "ns")
+        return min(ok)[1]
+    if spec.objective == "space":
+        ok = [(lat, e) for e, lat, sz in scored
+              if sz <= spec.storage_budget_bytes]
+        if not ok:
+            raise InfeasibleSpecError("space", spec.storage_budget_bytes,
+                                      min(sz for _, _, sz in scored), "bytes")
+        return min(ok)[1]
+    return int(spec.error)

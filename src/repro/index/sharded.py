@@ -50,7 +50,7 @@ any future multi-host serving tier consume.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Sequence
+from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import numpy as np
 
@@ -58,6 +58,9 @@ from repro.index.table import (SegmentTable, route_keys, shard_boundaries,
                                shard_partition)
 
 from .snapshot import ServingHandle, Snapshot, SnapshotPublisher
+
+if TYPE_CHECKING:  # runtime import is lazy (fit builds services via plans)
+    from .fit import IndexPlan
 
 
 class PackedShardTables(NamedTuple):
@@ -166,6 +169,14 @@ class ShardedIndexService:
     ``backend`` may be any registered engine, including ``"dispatch"`` (the
     batch-size-aware tier router in ``repro.index.engine``).
 
+    Construction is plan-first (see ``repro.index.fit``): pass ``plan=`` (an
+    ``IndexPlan``, e.g. from ``fit.plan(keys, FitSpec(...))``) and the
+    service takes its error / shard count / buffer / backend / publish
+    cadence / dispatch thresholds from it; or pass the raw expert knobs,
+    which are wrapped in a trivially-resolved plan so ``svc.plan`` always
+    answers "what configuration is this service running?".
+    :meth:`from_plan` is the classmethod form used by ``fit.open_index``.
+
     Rebalancing knobs: ``skew_threshold`` is the max/mean keys-per-shard
     ratio above which :meth:`rebalance` acts (:meth:`needs_rebalance`);
     ``pending_weight`` scales unpublished per-shard insert counts into the
@@ -174,9 +185,11 @@ class ShardedIndexService:
     every :meth:`publish`.
     """
 
-    def __init__(self, keys: np.ndarray, error: int, *, n_shards: int = 4,
-                 buffer_size: int = 0, payload: np.ndarray | None = None,
-                 mode: str = "paper", backend: str = "numpy",
+    def __init__(self, keys: np.ndarray, error: int | None = None, *,
+                 plan: "IndexPlan | None" = None, n_shards: int | None = None,
+                 buffer_size: int | None = None,
+                 payload: np.ndarray | None = None,
+                 mode: str = "paper", backend: str | None = None,
                  engine_opts: dict[str, dict] | None = None,
                  publish_every: int | None = None,
                  skew_threshold: float = 2.0,
@@ -185,6 +198,32 @@ class ShardedIndexService:
                  assume_sorted: bool = False):
         # lazy: repro.core.tree imports repro.index.table at module level
         from repro.core.tree import FITingTree
+        from .fit import IndexPlan
+
+        raw = {"error": error, "n_shards": n_shards,
+               "buffer_size": buffer_size, "backend": backend,
+               "publish_every": publish_every}
+        if plan is None:
+            if error is None:
+                raise TypeError("pass error=... (expert knobs) or plan=... "
+                                "(an IndexPlan from repro.index.fit)")
+            plan = IndexPlan.from_knobs(
+                error=error,
+                n_shards=4 if n_shards is None else n_shards,
+                buffer_size=0 if buffer_size is None else buffer_size,
+                backend="numpy" if backend is None else backend,
+                publish_every=publish_every)
+        else:
+            clashing = sorted(k for k, v in raw.items() if v is not None)
+            if clashing:
+                raise TypeError("pass either the raw knobs or plan=, not "
+                                f"both -- the plan already fixes "
+                                f"{', '.join(clashing)}")
+        self.plan = plan
+        error, n_shards = plan.error, plan.n_shards
+        buffer_size, backend = plan.buffer_size, plan.backend
+        publish_every = plan.publish_every
+        engine_opts = plan.merge_engine_opts(engine_opts)
 
         if publish_every is not None and buffer_size == 0:
             raise ValueError("publish_every requires buffer_size > 0 "
@@ -228,6 +267,16 @@ class ShardedIndexService:
             handle.install(pub.publish())     # epoch 1 everywhere
         self._shard_set = ShardSet(version=1, boundaries=bounds,
                                    handles=handles)
+
+    @classmethod
+    def from_plan(cls, keys: np.ndarray, plan: "IndexPlan", *,
+                  payload: np.ndarray | None = None,
+                  **service_kwargs) -> "ShardedIndexService":
+        """Build from a resolved :class:`repro.index.fit.IndexPlan` (the
+        ``fit.open_index`` path).  ``service_kwargs`` are the serving-policy
+        knobs the plan does not fix (``skew_threshold``, ``pending_weight``,
+        ``auto_rebalance``, ``mode``, ``engine_opts``, ``assume_sorted``)."""
+        return cls(keys, plan=plan, payload=payload, **service_kwargs)
 
     # ------------------------------------------------------------------ shape
     @property

@@ -1,6 +1,11 @@
-"""Serving steps, paged KV cache, batching, and index snapshot serving."""
+"""Serving steps, paged KV cache, batching, and index snapshot serving.
+
+The SLO-driven construction path (``FitSpec`` -> ``open_index``) is
+re-exported from ``repro.index.fit`` so serving code has one import."""
+from repro.index.fit import FitSpec, IndexPlan, open_index
 from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
 
 from .index_service import IndexService
 
-__all__ = ["IndexService", "ShardSet", "ShardedIndexService", "ShardStats"]
+__all__ = ["FitSpec", "IndexPlan", "IndexService", "ShardSet",
+           "ShardedIndexService", "ShardStats", "open_index"]

@@ -23,24 +23,67 @@ directly when write skew matters.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import TYPE_CHECKING
+
 import numpy as np
 
 from repro.index.sharded import ShardedIndexService
 from repro.index.snapshot import Snapshot
 
+if TYPE_CHECKING:  # runtime import is lazy (fit builds services via plans)
+    from repro.index.fit import IndexPlan
+
 
 class IndexService:
-    """One writable index + its serving handle, with optional auto-publish."""
+    """One writable index + its serving handle, with optional auto-publish.
 
-    def __init__(self, keys: np.ndarray, error: int, *, buffer_size: int = 0,
+    Plan-first construction (see ``repro.index.fit``): pass ``plan=`` to take
+    error / buffer / backend / publish cadence / dispatch thresholds from a
+    resolved ``IndexPlan`` (the shard count is forced to 1 -- this is the
+    single-shard facade; ``fit.open_index`` picks the sharded service when
+    the plan says so), or the raw expert knobs, which are wrapped in a
+    trivially-resolved plan exposed as ``svc.plan``.
+    """
+
+    def __init__(self, keys: np.ndarray, error: int | None = None, *,
+                 plan: IndexPlan | None = None, buffer_size: int | None = None,
                  payload: np.ndarray | None = None, mode: str = "paper",
-                 backend: str = "numpy",
+                 backend: str | None = None,
                  engine_opts: dict[str, dict] | None = None,
-                 publish_every: int | None = None):
+                 publish_every: int | None = None,
+                 skew_threshold: float = 2.0,
+                 pending_weight: float = 1.0,
+                 auto_rebalance: bool = False,
+                 assume_sorted: bool = False):
+        n_shards = None
+        if plan is None:
+            n_shards = 1
+        elif plan.n_shards != 1:
+            plan = dataclasses.replace(plan, n_shards=1)
+        # the rebalance-policy knobs are accepted (open_index passes them
+        # through unconditionally) and inert: one shard never rebalances
         self._sharded = ShardedIndexService(
-            keys, error, n_shards=1, buffer_size=buffer_size, payload=payload,
-            mode=mode, backend=backend, engine_opts=engine_opts,
-            publish_every=publish_every)
+            keys, error, plan=plan, n_shards=n_shards,
+            buffer_size=buffer_size, payload=payload, mode=mode,
+            backend=backend, engine_opts=engine_opts,
+            publish_every=publish_every, skew_threshold=skew_threshold,
+            pending_weight=pending_weight, auto_rebalance=auto_rebalance,
+            assume_sorted=assume_sorted)
+
+    @classmethod
+    def from_plan(cls, keys: np.ndarray, plan: IndexPlan, *,
+                  payload: np.ndarray | None = None,
+                  **service_kwargs) -> "IndexService":
+        """Build from a resolved :class:`repro.index.fit.IndexPlan` (the
+        ``fit.open_index`` path for one-shard plans)."""
+        return cls(keys, plan=plan, payload=payload, **service_kwargs)
+
+    @property
+    def plan(self) -> IndexPlan:
+        """The plan this service was built from (trivially resolved when
+        constructed from raw knobs)."""
+        return self._sharded.plan
 
     # ----------------------------------------------------- one-shard plumbing
     @property

@@ -1,8 +1,14 @@
-"""Sec. 6 cost model: monotonicity, pessimism, and the two choosers."""
+"""Sec. 6 cost model: monotonicity, pessimism, the two choosers (incl.
+infeasible budgets and alternate latency models), the segments-curve
+learner's degenerate single-candidate form, and the dispatch tier
+crossings derived from the same models."""
+
+import math
 
 from repro.core import (CostParams, FITingTree, TPUCostParams,
                         choose_error_for_latency, choose_error_for_space,
-                        latency_ns, latency_ns_tpu, learn_segments_fn, size_bytes)
+                        dispatch_thresholds, latency_ns, latency_ns_tpu,
+                        learn_segments_fn, size_bytes, tier_cost_curves)
 from repro.core.datasets import weblogs_like
 
 P = CostParams(c_ns=50.0, fanout=16, fill=0.5, buffer_size=16)
@@ -58,6 +64,65 @@ def test_infeasible_returns_none():
     keys, fn = _segments_fn()
     assert choose_error_for_latency(1.0, fn, CANDS, P) is None
     assert choose_error_for_space(1.0, fn, CANDS, P) is None
+
+
+def test_infeasible_budgets_with_latency_fn_and_empty_candidates():
+    """Planner contract: the choosers signal infeasibility as None -- also
+    under a substituted latency model and under an empty candidate sweep."""
+    keys, fn = _segments_fn()
+    tpu = TPUCostParams()
+    tpu_lat = lambda e, s: latency_ns_tpu(e, s, tpu)  # noqa: E731
+    assert choose_error_for_latency(1.0, fn, CANDS, P,
+                                    latency_fn=tpu_lat) is None
+    # feasible under the TPU model once the budget clears the DMA floor
+    e = choose_error_for_latency(10 * tpu.dma_setup_ns, fn, CANDS, P,
+                                 latency_fn=tpu_lat)
+    assert e is not None
+    assert latency_ns_tpu(e, fn(e), tpu) <= 10 * tpu.dma_setup_ns
+    assert choose_error_for_latency(1e12, fn, [], P) is None
+    assert choose_error_for_space(1e12, fn, [], P) is None
+
+
+def test_learn_segments_fn_single_candidate_is_constant():
+    """One measured error -> the log-log interpolation degenerates to a
+    constant curve (np.interp clamps), not a crash or a zero."""
+    keys, _ = _segments_fn()
+    fn = learn_segments_fn(keys, [64], sample=None)
+    s = fn(64)
+    assert s >= 1
+    assert fn(1) == fn(64) == fn(16384) == s
+
+
+def test_dispatch_thresholds_ordering_and_tier_curves():
+    """The tier crossings respect 0 <= small_max < large_min for any table
+    shape, and the underlying curves have the fixed/marginal cost shape the
+    dispatch design assumes (host: no fixed cost, highest marginal; pallas:
+    highest fixed cost, lowest marginal)."""
+    for error, segs in [(4, 2), (16, 200), (64, 1000), (1024, 50_000),
+                        (16384, 2)]:
+        small_max, large_min = dispatch_thresholds(error, segs)
+        assert 0 <= small_max < large_min, (error, segs)
+        curves = tier_cost_curves(error, segs)
+        (f_s, p_s) = curves["small"]
+        (f_m, p_m) = curves["medium"]
+        (f_l, p_l) = curves["large"]
+        assert f_s <= f_m <= f_l
+        assert p_s > p_m
+        if error <= 1024:       # a huge +-error window streams more HBM
+            assert p_m > p_l    # bytes than the bisect's pointwise probes,
+        else:                   # so pallas rightly loses its marginal edge
+            assert large_min >= 1 << 31     # ...and is effectively disabled
+    # a costlier host model pushes the device crossover earlier
+    slow_host = CostParams(c_ns=500.0)
+    fast_host = CostParams(c_ns=50.0)
+    assert dispatch_thresholds(64, 1000, cpu=slow_host)[0] \
+        <= dispatch_thresholds(64, 1000, cpu=fast_host)[0]
+    # the host tier serves a published snapshot (no write buffers), so its
+    # marginal cost must not include the Eq. 1 buffer-scan term
+    p = CostParams()
+    host = tier_cost_curves(64, 1000, cpu=p)["small"][1]
+    assert host == latency_ns(64, 1000, p) \
+        - p.c_ns * math.log2(max(p.buffer_size, 2))
 
 
 def test_tpu_model_window_term_scales_with_error():

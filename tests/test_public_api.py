@@ -1,0 +1,61 @@
+"""API-surface snapshot: the lazily-exported names and ``__all__`` stay in
+sync, and every exported name actually resolves -- guarding the redesigned
+surface (PEP 562 lazy modules) against silent drift."""
+import importlib
+import itertools
+
+import pytest
+
+LAZY_SETS = {
+    "repro.index": ["_ENGINE_NAMES", "_SNAPSHOT_NAMES", "_SHARDED_NAMES",
+                    "_FIT_NAMES"],
+    "repro.core": ["_JAX_INDEX_NAMES"],
+}
+
+LAZY_HOMES = {  # lazy-set name -> submodule that must define those names
+    "_ENGINE_NAMES": "repro.index.engine",
+    "_SNAPSHOT_NAMES": "repro.index.snapshot",
+    "_SHARDED_NAMES": "repro.index.sharded",
+    "_FIT_NAMES": "repro.index.fit",
+    "_JAX_INDEX_NAMES": "repro.core.jax_index",
+}
+
+
+@pytest.mark.parametrize("modname", sorted(LAZY_SETS))
+def test_all_covers_eager_and_lazy_names_exactly(modname):
+    mod = importlib.import_module(modname)
+    exported = list(mod.__all__)
+    assert len(exported) == len(set(exported)), "duplicate names in __all__"
+    lazy_sets = [getattr(mod, s) for s in LAZY_SETS[modname]]
+    for a, b in itertools.combinations(lazy_sets, 2):
+        assert not (a & b), "lazy-resolution sets overlap"
+    lazy = set().union(*lazy_sets)
+    assert lazy <= set(exported), \
+        f"lazy names missing from __all__: {sorted(lazy - set(exported))}"
+    eager = set(exported) - lazy
+    missing = {n for n in eager if n not in vars(mod)}
+    assert not missing, f"eagerly-exported names not defined: {sorted(missing)}"
+
+
+@pytest.mark.parametrize("modname", [*sorted(LAZY_SETS), "repro.serve"])
+def test_every_exported_name_resolves(modname):
+    mod = importlib.import_module(modname)
+    for name in mod.__all__:
+        assert getattr(mod, name) is not None, name
+
+
+@pytest.mark.parametrize("set_name", sorted(LAZY_HOMES))
+def test_lazy_names_live_in_their_home_module(set_name):
+    owner = next(m for m, sets in LAZY_SETS.items() if set_name in sets)
+    names = getattr(importlib.import_module(owner), set_name)
+    home = importlib.import_module(LAZY_HOMES[set_name])
+    missing = [n for n in sorted(names) if not hasattr(home, n)]
+    assert not missing, f"{LAZY_HOMES[set_name]} lacks {missing}"
+
+
+def test_unknown_attribute_raises_attribute_error():
+    import repro.core
+    import repro.index
+    for mod in (repro.index, repro.core):
+        with pytest.raises(AttributeError, match="no attribute"):
+            mod.definitely_not_exported
