@@ -1,0 +1,114 @@
+"""Range-scan performance: throughput vs selectivity, and the point-vs-range
+head-to-head the typed query plane exists to win.
+
+Two measurements over the unified core (``repro.index.query``):
+
+* **scan throughput vs selectivity** -- ``range(lo, hi)`` resolves two
+  bounded predecessor searches and then slices the clustered key column, so
+  per-scan cost should be a fixed locate term plus a per-row copy; rows/s
+  should *rise* with selectivity as the locate cost amortizes.
+* **point-vs-range head-to-head** -- enumerating the keys of a span by
+  probing every key as a point lookup (the only option before the query
+  plane) vs issuing one ``range()`` (and one ``count()``, the
+  no-materialization form).  The gap is the paper's Sec. 4.2 argument for
+  the clustered page layout, measured.
+
+Results are written as JSON (``out/bench_range.json``) via the
+``benchmarks.common`` plumbing, plus the usual ``emit`` headline lines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.datasets import weblogs_like
+from repro.serve import IndexService
+
+from .common import emit, write_json
+
+N = 200_000
+ERROR = 64
+SELECTIVITIES = (1e-4, 1e-3, 1e-2, 1e-1)
+SCANS_PER_SELECTIVITY = 50
+HEAD_TO_HEAD_ROWS = 2048
+
+
+def _scan_bounds(keys: np.ndarray, rng, selectivity: float, m: int
+                 ) -> list[tuple[float, float]]:
+    """m random [lo, hi] spans each covering ~selectivity of the key column."""
+    n = keys.shape[0]
+    span = max(1, int(round(selectivity * n)))
+    starts = rng.integers(0, max(n - span, 1), size=m)
+    return [(float(keys[s]), float(keys[min(s + span - 1, n - 1)]))
+            for s in starts]
+
+
+def run(n: int = N, error: int = ERROR,
+        selectivities: tuple[float, ...] = SELECTIVITIES,
+        scans_per_selectivity: int = SCANS_PER_SELECTIVITY,
+        head_to_head_rows: int = HEAD_TO_HEAD_ROWS,
+        backend: str = "numpy"):
+    rng = np.random.default_rng(7)
+    keys = weblogs_like(n)                  # same workload as the other benches
+    svc = IndexService(keys, error=error, backend=backend, assume_sorted=True)
+
+    # --- (a) scan throughput vs selectivity --------------------------------
+    throughput = []
+    for sel in selectivities:
+        bounds = _scan_bounds(keys, rng, sel, scans_per_selectivity)
+        svc.range(*bounds[0])               # warm engine caches
+        rows = 0
+        t0 = time.perf_counter()
+        for lo, hi in bounds:
+            rows += svc.range(lo, hi).count
+        dt = time.perf_counter() - t0
+        rows_per_s = rows / dt
+        throughput.append({
+            "selectivity": sel, "scans": len(bounds), "rows": rows,
+            "rows_per_s": rows_per_s,
+            "us_per_scan": dt / len(bounds) * 1e6})
+        emit("range", f"rows_per_s_sel{sel:g}", rows_per_s,
+             f"backend={backend}")
+
+    # --- (b) point-vs-range head-to-head -----------------------------------
+    span = min(head_to_head_rows, n // 2)
+    s = int(rng.integers(0, n - span))
+    lo, hi = float(keys[s]), float(keys[s + span - 1])
+    probe = keys[s:s + span]                # the keys a point loop would probe
+
+    def by_points():
+        return svc.lookup(probe)
+
+    def by_range():
+        return svc.range(lo, hi)
+
+    def by_count():
+        return svc.count([lo], [hi])
+
+    results_h2h = {}
+    for name, fn in (("points", by_points), ("range", by_range),
+                     ("count", by_count)):
+        fn()                                # warm
+        t0 = time.perf_counter()
+        reps = 20
+        for _ in range(reps):
+            fn()
+        us = (time.perf_counter() - t0) / reps * 1e6
+        results_h2h[name] = us
+        emit("range", f"h2h_{name}_us", us, f"rows={span}")
+    emit("range", "h2h_speedup_range_vs_points",
+         results_h2h["points"] / max(results_h2h["range"], 1e-9))
+
+    results = {
+        "config": {"n": n, "error": error, "backend": backend,
+                   "head_to_head_rows": span},
+        "scan_throughput": throughput,
+        "head_to_head_us": results_h2h,
+    }
+    write_json("bench_range", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,7 @@ MODULES = [
     "bench_breakdown",      # Fig 13
     "bench_kernel",         # Pallas lookup kernel
     "bench_sharded",        # sharded serving: qps vs shards, publish latency
+    "bench_range",          # query plane: scan throughput, point-vs-range
 ]
 
 

@@ -15,8 +15,8 @@ import argparse
 import platform
 import time
 
-from . import (bench_insert, bench_lookup, bench_plan, bench_rebalance,
-               bench_sharded)
+from . import (bench_insert, bench_lookup, bench_plan, bench_range,
+               bench_rebalance, bench_sharded)
 from .common import write_json
 
 TINY = {
@@ -38,6 +38,11 @@ TINY = {
     "plan": (bench_plan.run,
              dict(n=20_000, n_queries=512, candidates=(16, 64, 256, 1024),
                   batch_sizes=(1, 8, 64, 512))),
+    # the query plane: scan throughput vs selectivity + the point-vs-range
+    # head-to-head, so the artifact tracks scan performance per PR
+    "range": (bench_range.run,
+              dict(n=20_000, selectivities=(1e-3, 1e-2, 1e-1),
+                   scans_per_selectivity=10, head_to_head_rows=512)),
 }
 
 

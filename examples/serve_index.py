@@ -8,8 +8,28 @@ lines; no error / shard count / threshold picked by hand:
     svc.insert(k); svc.publish(); svc.lookup(q)
 
 ``plan(keys, spec).explain()`` shows the predicted latency/size of every
-candidate error before anything is built.  Everything below the SLO demo is
-the expert raw-knob path:
+candidate error before anything is built.
+
+The typed query plane (``repro.index.query``) answers more than point
+membership -- the clustered layout gives predecessor search, and therefore
+range scans, for free:
+
+    svc.point(qs)            # typed membership: leftmost rank + found flag
+    svc.range(lo, hi)        # inclusive [lo, hi]: global rank span +
+                             #   materialized keys (and payloads)
+    svc.count(los, his)      # span sizes only, nothing materialized
+    svc.predecessor(qs)      # rank of the largest key <= q (rightmost)
+    svc.successor(qs)        # rank of the smallest key >= q (leftmost)
+
+All five verbs derive from one per-backend ``search(queries, side)``
+primitive, so every backend (and the sharded service, which stitches spans
+across shards) returns identical answers.  A scan-heavy workload tells the
+SLO path so: ``FitSpec(latency_budget_ns=..., range_fraction=0.3,
+range_scan_rows=512)`` folds the range-scan cost term (fixed predecessor
+cost + per-row scan marginal) into every candidate's predicted latency and
+the dispatch-tier crossings.
+
+Everything below the SLO demo is the expert raw-knob path:
 
   * one `SegmentTable`, every engine backend (numpy / xla-window / xla-bisect
     / pallas / dispatch) checked against the oracle and timed;
@@ -103,6 +123,25 @@ def main():
     print(f"  open_index: {type(svc).__name__} serving error="
           f"{svc.plan.error} (no knob hand-picked); insert -> publish -> "
           f"lookup OK\n")
+
+    # --- the typed query plane: point vs range vs count -------------------
+    # a scan-heavy SLO folds the range-scan cost term into the plan
+    scan_spec = FitSpec(latency_budget_ns=max(args.latency_ns, 800.0),
+                        range_fraction=0.3, range_scan_rows=512)
+    scan_svc = open_index(keys, scan_spec)
+    lo, hi = float(keys[len(keys) // 4]), float(keys[len(keys) // 2])
+    res = scan_svc.range(lo, hi)            # inclusive [lo, hi], materialized
+    n_only = scan_svc.count([lo], [hi])[0]  # same span, nothing materialized
+    pt = scan_svc.point(keys[:4])
+    pred = scan_svc.predecessor(np.asarray([hi + 0.5]))
+    assert res.count == n_only == res.keys.shape[0]
+    assert pt.found.all() and pred.found[0]
+    print(f"  query plane: range [{lo:.0f}, {hi:.0f}] -> "
+          f"[{res.lo_rank}, {res.hi_rank}) = {res.count} keys "
+          f"(count-only agrees: {n_only}); point found {pt.n_found}/4; "
+          f"predecessor({hi:.0f}+0.5) = rank {pred.rank[0]}")
+    shapes = scan_svc.service_stats()["query_counts"]
+    print(f"  query counters: {shapes}\n")
 
     # --- expert raw-knob path from here down
     q = jnp.asarray(keys[rng.integers(0, args.n, args.queries)], jnp.float32)

@@ -10,7 +10,8 @@ from .tree import FITingTree, PackedRouter
 from .cost_model import (CostParams, TPUCostParams, choose_error_for_latency,
                          choose_error_for_space, dispatch_thresholds,
                          latency_ns, latency_ns_tpu, learn_segments_fn,
-                         size_bytes, tier_cost_curves)
+                         range_latency_ns, range_latency_ns_tpu,
+                         scan_ns_per_row_tpu, size_bytes, tier_cost_curves)
 from . import datasets
 
 _JAX_INDEX_NAMES = {"DeviceIndex", "build_device_index", "lookup",
@@ -21,7 +22,8 @@ __all__ = [
     "verify_segments", "max_segments_bound", "FITingTree", "PackedRouter",
     "CostParams", "TPUCostParams", "latency_ns", "latency_ns_tpu", "size_bytes",
     "learn_segments_fn", "choose_error_for_latency", "choose_error_for_space",
-    "dispatch_thresholds", "tier_cost_curves",
+    "dispatch_thresholds", "tier_cost_curves", "range_latency_ns",
+    "range_latency_ns_tpu", "scan_ns_per_row_tpu",
     "datasets", *sorted(_JAX_INDEX_NAMES),
 ]
 

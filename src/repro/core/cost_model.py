@@ -22,6 +22,7 @@ class CostParams:
     fanout: int = 16          # b, router fanout
     fill: float = 0.5         # f, tree fill ratio (Sec. 6.2)
     buffer_size: int = 16     # buff
+    scan_ns_per_row: float = 0.5  # sequential page-scan marginal (range queries)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +65,28 @@ def latency_ns_tpu(error: int, n_segments: int, p: TPUCostParams,
         math.log(max(n_segments, 2), TPU_ROUTER_FANOUT)))
     window_bytes = (2 * error + 2) * p.bytes_per_key
     return p.dma_setup_ns + levels * p.vmem_step_ns + window_bytes / p.hbm_gbps
+
+
+# ----------------------------------------------------------- range-scan model
+def scan_ns_per_row_tpu(p: TPUCostParams) -> float:
+    """Sequential scan marginal on TPU: rows stream at HBM bandwidth."""
+    return p.bytes_per_key / p.hbm_gbps
+
+
+def range_latency_ns(error: int, n_segments: int, p: CostParams,
+                     scan_rows: float) -> float:
+    """Range-scan latency: the clustered layout answers a range with one
+    predecessor search (the paper's Eq. 1 point cost locates the scan start)
+    plus a sequential page scan -- fixed predecessor cost + per-row scan
+    marginal."""
+    return latency_ns(error, n_segments, p) + scan_rows * p.scan_ns_per_row
+
+
+def range_latency_ns_tpu(error: int, n_segments: int, p: TPUCostParams,
+                         scan_rows: float) -> float:
+    """TPU form of :func:`range_latency_ns`: predecessor DMA + streamed rows."""
+    return (latency_ns_tpu(error, n_segments, p)
+            + scan_rows * scan_ns_per_row_tpu(p))
 
 
 def learn_segments_fn(keys: np.ndarray, errors: Sequence[int],
@@ -130,7 +153,9 @@ def choose_error_for_space(s_req_bytes: float, segments_fn: Callable[[int], int]
 # ------------------------------------------------------- dispatch tier curves
 def tier_cost_curves(error: int, n_segments: int,
                      cpu: CostParams | None = None,
-                     tpu: TPUCostParams | None = None
+                     tpu: TPUCostParams | None = None,
+                     range_fraction: float = 0.0,
+                     scan_rows: float = 0.0
                      ) -> dict[str, tuple[float, float]]:
     """Modeled batched-lookup cost per dispatch tier: ``{tier: (fixed_ns,
     per_query_ns)}`` so a batch of ``n`` queries costs ``fixed + n * per``.
@@ -148,7 +173,13 @@ def tier_cost_curves(error: int, n_segments: int,
     * ``large`` (pallas): the launch plus the plan/bucketing prelude up
       front; each query's +-error window is then streamed through the
       compare-reduce kernel at HBM bandwidth.
-    """
+
+    ``range_fraction``/``scan_rows`` fold a scan-heavy workload into the
+    marginal costs: that fraction of queries additionally scans ``scan_rows``
+    rows, at the host's sequential-scan rate on the ``small`` tier and at HBM
+    bandwidth on the device tiers -- scans amortize the device launch faster
+    than point probes, so the crossings shift left as ``range_fraction``
+    grows."""
     cpu = cpu or CostParams()
     tpu = tpu or TPUCostParams()
     steps = math.ceil(math.log2(2 * max(error, 1) + 2))
@@ -157,18 +188,23 @@ def tier_cost_curves(error: int, n_segments: int,
         math.log(max(n_segments, 2), TPU_ROUTER_FANOUT)))
     host_ns = (latency_ns(error, n_segments, cpu)
                - cpu.c_ns * math.log2(max(cpu.buffer_size, 2)))
+    host_scan = range_fraction * scan_rows * cpu.scan_ns_per_row
+    dev_scan = range_fraction * scan_rows * scan_ns_per_row_tpu(tpu)
     return {
-        "small": (0.0, host_ns),
+        "small": (0.0, host_ns + host_scan),
         "medium": (tpu.launch_ns + tpu.dma_setup_ns,
-                   steps * tpu.vmem_step_ns + levels * tpu.vmem_step_ns),
+                   steps * tpu.vmem_step_ns + levels * tpu.vmem_step_ns
+                   + dev_scan),
         "large": (tpu.launch_ns + tpu.dma_setup_ns + tpu.plan_ns,
-                  window_bytes / tpu.hbm_gbps + tpu.vmem_step_ns),
+                  window_bytes / tpu.hbm_gbps + tpu.vmem_step_ns + dev_scan),
     }
 
 
 def dispatch_thresholds(error: int, n_segments: int,
                         cpu: CostParams | None = None,
-                        tpu: TPUCostParams | None = None) -> tuple[int, int]:
+                        tpu: TPUCostParams | None = None,
+                        range_fraction: float = 0.0,
+                        scan_rows: float = 0.0) -> tuple[int, int]:
     """Cost-model-calibrated ``(small_max, large_min)`` for ``DispatchEngine``:
     the batch sizes where the modeled per-tier latency curves cross.
 
@@ -177,8 +213,11 @@ def dispatch_thresholds(error: int, n_segments: int,
     batch where the Pallas tier's extra plan cost pays for its lower marginal
     cost.  Degenerate slopes (a tier whose marginal cost is not strictly
     better than its predecessor's) push the crossing to the extreme, so the
-    invariant ``0 <= small_max < large_min`` always holds."""
-    curves = tier_cost_curves(error, n_segments, cpu, tpu)
+    invariant ``0 <= small_max < large_min`` always holds.
+    ``range_fraction``/``scan_rows`` make the crossings scan-aware (see
+    :func:`tier_cost_curves`)."""
+    curves = tier_cost_curves(error, n_segments, cpu, tpu,
+                              range_fraction, scan_rows)
     (f_s, p_s), (f_m, p_m), (f_l, p_l) = (
         curves["small"], curves["medium"], curves["large"])
     if p_s > p_m:

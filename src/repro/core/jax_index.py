@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.engine import (DeviceIndex, device_index, predict_positions,
-                                xla_lookup)
+                                xla_lookup, xla_search)
 from repro.index.table import SegmentTable
 
 from .segmentation import Segments
@@ -60,24 +60,19 @@ def lookup(idx: DeviceIndex, queries: jax.Array,
 
 def bound(idx: DeviceIndex, q: jax.Array, side: Literal["left", "right"] = "left"
           ) -> jax.Array:
-    """Batched lower/upper bound rank via the bounded bisect (O(log error))."""
-    n = idx.keys.shape[0]
-    pred = predict_positions(idx, q)
-    lo = jnp.clip(pred - idx.error, 0, n).astype(jnp.int32)
-    hi = jnp.clip(pred + idx.error + 1, 0, n).astype(jnp.int32)
-    steps = int(np.ceil(np.log2(2 * idx.error + 2)))
-
-    def body(_, lh):
-        l, h = lh
-        mid = (l + h) // 2
-        v = idx.keys[jnp.minimum(mid, n - 1)]
-        go = ((v < q) if side == "left" else (v <= q)) & (l < h)
-        return jnp.where(go, mid + 1, l), jnp.where(go, h, mid)
-
-    l, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    return l
+    """Batched lower/upper bound rank: thin wrapper over the query plane's
+    device primitive (``repro.index.engine.xla_search``, O(log error)
+    bounded bisect + duplicate snap).  The snap is the fix the historical
+    in-module bisect lacked: a duplicate run straddling the routed segment
+    (or longer than the window) now resolves to the exact global rank on
+    both sides, matching ``np.searchsorted`` and every other backend."""
+    return xla_search(idx, q, side, "bisect")
 
 
 def range_count(idx: DeviceIndex, lo_q: jax.Array, hi_q: jax.Array) -> jax.Array:
-    """Batched range-count: #keys in [lo_q, hi_q] (duplicates included)."""
-    return bound(idx, hi_q, "right") - bound(idx, lo_q, "left")
+    """Batched range-count: #keys in the inclusive [lo_q, hi_q] (duplicates
+    included).  Thin wrapper over the query plane's contract: leftmost rank
+    at ``lo_q``, rightmost at ``hi_q``, inverted ranges count 0 instead of
+    going negative."""
+    return jnp.maximum(
+        xla_search(idx, hi_q, "right") - xla_search(idx, lo_q, "left"), 0)

@@ -24,7 +24,8 @@ import math
 
 import numpy as np
 
-from repro.index.table import SegmentTable, numpy_lookup, route_keys
+from repro.index.table import (SegmentTable, numpy_lookup, numpy_search,
+                               route_keys)
 
 from .segmentation import Mode, Segments, shrinking_cone
 
@@ -230,25 +231,39 @@ class FITingTree:
         t = self._table_cache
         return t if t.epoch == epoch else dataclasses.replace(t, epoch=epoch)
 
+    def payload_column(self) -> np.ndarray | None:
+        """Payload column parallel to ``as_table().keys`` (pages only --
+        callers that need buffered payloads flush first, as the publisher
+        does).  None for a clustered index; always a fresh array, so a
+        snapshot holding it never aliases mutable tree state."""
+        if self.payloads is None:
+            return None
+        return np.concatenate(self.payloads) if self.payloads else \
+            np.empty(0)
+
     def range_query(self, lo_key: float, hi_key: float) -> np.ndarray:
-        """Sec. 4.2: locate the start, then scan forward merging page + buffer."""
-        out = []
-        sid = self._segment_of(lo_key)
-        while sid < self.n_segments:
-            page = self.pages[sid]
-            if page.shape[0] and page[0] > hi_key:
-                break
-            a = np.searchsorted(page, lo_key, side="left")
-            b = np.searchsorted(page, hi_key, side="right")
-            out.append(page[a:b])
-            buf = self.buffers[sid]
-            if buf:
-                i = bisect.bisect_left(buf, lo_key)
-                j = bisect.bisect_right(buf, hi_key)
-                out.append(np.asarray(buf[i:j], np.float64))
-            sid += 1
-        if not out:
+        """Sec. 4.2 range scan: thin wrapper over the typed query plane.
+
+        The page half delegates to the plane's bounded rank search
+        (``repro.index.table.numpy_search`` -- the ``[lo, hi]``-inclusive
+        contract of ``repro.index.query``: leftmost rank at ``lo``, rightmost
+        at ``hi``), which also fixes the legacy scan's blind spot: it started
+        at ``lo_key``'s *routed* segment, silently dropping duplicates of
+        ``lo_key`` whose run began in an earlier segment.  Buffered inserts
+        (invisible to the page snapshot) merge on top, as before."""
+        if hi_key < lo_key:
             return np.empty(0, np.float64)
+        table = self.as_table()
+        bounds = np.asarray([lo_key, hi_key], np.float64)
+        lo_rank = int(numpy_search(table, bounds[:1], "left")[0])
+        hi_rank = max(int(numpy_search(table, bounds[1:], "right")[0]), lo_rank)
+        out = [table.keys[lo_rank:hi_rank]]
+        for sid in self.dirty_segments():
+            buf = self.buffers[sid]
+            i = bisect.bisect_left(buf, lo_key)
+            j = bisect.bisect_right(buf, hi_key)
+            if i < j:
+                out.append(np.asarray(buf[i:j], np.float64))
         return np.sort(np.concatenate(out))
 
     # ----------------------------------------------------------------- insert

@@ -11,10 +11,14 @@ Module map (see ROADMAP.md):
   table.py    -- immutable ``SegmentTable`` + ``route_keys`` (THE router) +
                  the shard partition (``shard_boundaries``/``shard_partition``);
                  numpy-only, shared by every layer
+  query.py    -- the typed query plane: ``PointResult``/``RangeResult`` and
+                 the ``QueryVerbs`` mixin deriving point / range / count /
+                 predecessor / successor from the one ``search`` primitive
   engine.py   -- ``LookupEngine`` registry: numpy / xla-window / xla-bisect /
-                 pallas bounded-window search, ``DeviceIndex`` device form,
-                 and ``DispatchEngine`` (batch-size-aware tier routing with
-                 cost-model-derived default thresholds)
+                 pallas bounded-window search (point lookups *and* the
+                 two-sided ``search`` rank primitive), ``DeviceIndex`` device
+                 form, and ``DispatchEngine`` (batch-size-aware tier routing
+                 with cost-model-derived default thresholds)
   snapshot.py -- epoch publishing: Alg. 4 inserts -> ``publish()`` ->
                  ``ServingHandle`` atomic swap into serving
   sharded.py  -- ``ShardedIndexService``: N key-partitioned writers with
@@ -22,19 +26,22 @@ Module map (see ROADMAP.md):
   fit.py      -- ``FitSpec`` -> ``plan()`` -> ``IndexPlan`` -> ``open_index``:
                  the Sec. 6 cost model resolving SLOs into every knob above
 
-``table`` is imported eagerly (pure numpy); the engine/snapshot/sharded/fit
-names are resolved lazily (PEP 562) so host-only code -- including the tree's
-``from repro.index.table import ...`` -- never pulls in jax.
+``table`` and ``query`` are imported eagerly (pure numpy); the
+engine/snapshot/sharded/fit names are resolved lazily (PEP 562) so host-only
+code -- including the tree's ``from repro.index.table import ...`` -- never
+pulls in jax.
 """
+from .query import PointResult, QueryVerbs, RangeResult
 from .table import (SegmentTable, build_shard_tables, numpy_lookup,
-                    route_keys, shard_boundaries, shard_cut_indices,
-                    shard_partition)
+                    numpy_search, route_keys, shard_boundaries,
+                    shard_cut_indices, shard_partition)
 
 _ENGINE_NAMES = {
     "DeviceIndex", "DispatchEngine", "LookupEngine", "LookupPlan",
     "available_backends", "device_index", "make_engine", "make_plan",
-    "pad_keys", "pallas_lookup", "predict_positions", "register_backend",
-    "snap_leftmost", "xla_lookup",
+    "pad_keys", "pallas_lookup", "pallas_search", "predict_positions",
+    "register_backend", "snap_leftmost", "snap_side", "xla_lookup",
+    "xla_search",
 }
 _SNAPSHOT_NAMES = {"ServingHandle", "Snapshot", "SnapshotPublisher"}
 _SHARDED_NAMES = {"PackedShardTables", "ShardSet", "ShardStats",
@@ -43,7 +50,8 @@ _FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
               "open_index", "plan"}
 
 __all__ = [
-    "SegmentTable", "build_shard_tables", "numpy_lookup", "route_keys",
+    "PointResult", "QueryVerbs", "RangeResult", "SegmentTable",
+    "build_shard_tables", "numpy_lookup", "numpy_search", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
     *sorted(_FIT_NAMES),

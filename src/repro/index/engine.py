@@ -13,6 +13,12 @@ sharded serving).  It now exists exactly once per backend, behind a registry:
 query batch to global ranks (-1 if absent; the *leftmost* rank for duplicated
 keys -- every backend snaps a hit whose left neighbour equals the query to
 the run start, see ``snap_leftmost``, so ranks are segmentation-independent).
+Every backend also implements the typed query plane's primitive
+``search(queries, side="left"|"right")`` -- the same bounded-window machinery
+generalized to insertion ranks (``np.searchsorted`` semantics, with
+``snap_side`` repairing duplicate runs that extend past the window) -- from
+which ``repro.index.query`` derives point / range / count / predecessor /
+successor uniformly across backends.
 Backends return identical ranks for any key column whose keys and queries
 are exact in f32 (e.g. integer keys < 2^24, the serving regime -- see
 rescale_keys): the ``numpy`` backend compares in f64 while the device
@@ -30,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .table import SegmentTable, numpy_lookup
+from .query import QueryVerbs
+from .table import SegmentTable, numpy_lookup, numpy_search
 
 
 class DeviceIndex(NamedTuple):
@@ -72,6 +79,27 @@ def snap_leftmost(keys: jax.Array, queries: jax.Array, rank: jax.Array,
     fixed = jax.lax.cond(
         jnp.any(need),
         lambda: jnp.searchsorted(keys, queries, side="left").astype(rank.dtype),
+        lambda: rank)
+    return jnp.where(need, fixed, rank)
+
+
+def snap_side(keys: jax.Array, queries: jax.Array, rank: jax.Array,
+              side: str) -> jax.Array:
+    """Side-generalized duplicate snap for insertion-rank searches (the
+    ``search`` primitive): a bounded window parks inside a duplicate run that
+    extends past it, which is detectable from the landing position alone --
+    for ``side="left"`` the left neighbour still equals the query, for
+    ``side="right"`` the landing key itself does.  ``lax.cond`` skips the
+    full-column searchsorted unless some query actually needs it (the same
+    fast-path discipline as :func:`snap_leftmost`)."""
+    n = keys.shape[0]
+    if side == "left":
+        need = (rank > 0) & (keys[jnp.maximum(rank - 1, 0)] == queries)
+    else:
+        need = (rank < n) & (keys[jnp.minimum(rank, n - 1)] == queries)
+    fixed = jax.lax.cond(
+        jnp.any(need),
+        lambda: jnp.searchsorted(keys, queries, side=side).astype(rank.dtype),
         lambda: rank)
     return jnp.where(need, fixed, rank)
 
@@ -122,6 +150,52 @@ def xla_lookup(idx: DeviceIndex, queries: jax.Array,
     return jnp.where(ok, lo, -1)
 
 
+def xla_search(idx: DeviceIndex, queries: jax.Array, side: str = "left",
+               strategy: Literal["window", "bisect"] = "bisect") -> jax.Array:
+    """Batched bounded-window rank search: the device mirror of
+    :func:`repro.index.table.numpy_search` (f32 compares).  Returns the
+    insertion rank of every query -- ``searchsorted(keys, q, side)`` -- via
+    the interpolated +-error window; jit-safe, ``error``/``side``/``strategy``
+    static.
+
+    ``window`` counts the in-window keys strictly below (``side="left"``) or
+    at-or-below (``side="right"``) each query; ``bisect`` runs log2(2e+2)
+    halving steps with the side's comparison.  Both end with
+    :func:`snap_side`, so duplicate runs extending past the window still
+    resolve to the exact global rank."""
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    n = idx.keys.shape[0]
+    pred = predict_positions(idx, queries)
+    e = idx.error
+    if strategy == "window":
+        w = 2 * e + 2
+        start = jnp.clip(pred - e, 0, jnp.maximum(n - w, 0)).astype(jnp.int32)
+        offs = start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+        valid = offs < n                       # clamped gathers replicate the
+        vals = idx.keys[jnp.minimum(offs, n - 1)]  # last key: mask them out
+        if side == "left":
+            cmp = vals < queries[:, None]
+        else:
+            cmp = vals <= queries[:, None]
+        rank = start + (valid & cmp).sum(axis=1).astype(jnp.int32)
+        return snap_side(idx.keys, queries, rank, side)
+    lo = jnp.clip(pred - e, 0, n).astype(jnp.int32)
+    hi = jnp.clip(pred + e + 1, 0, n).astype(jnp.int32)
+    steps = int(np.ceil(np.log2(2 * e + 2)))
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) // 2
+        v = idx.keys[jnp.minimum(mid, n - 1)]
+        ok = (v < queries) if side == "left" else (v <= queries)
+        go = ok & (lo < hi)
+        return jnp.where(go, mid + 1, lo), jnp.where(go, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return snap_side(idx.keys, queries, lo, side)
+
+
 # --------------------------------------------------------------------- pallas
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
@@ -147,23 +221,15 @@ def pad_keys(keys: jax.Array, plan: LookupPlan) -> jax.Array:
     return jnp.pad(keys.astype(jnp.float32), (0, pad), constant_values=jnp.inf)
 
 
-def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
-                  interpret: bool = True, fallback: bool = True) -> jax.Array:
-    """Batched point lookup via the Pallas kernel.  Returns ranks (-1 absent).
-
-    XLA prelude (router + interpolation + bucketing) -> Pallas compare-reduce
-    kernel -> scatter-back + bisect fallback for bucket overflow.  ``idx.error``
-    must be a Python int (it sizes the kernel window), so jit this via a
-    closure over ``idx`` rather than passing it as a traced argument."""
-    # lazy: repro.kernels imports this module for its thin wrappers
-    from repro.kernels.fitting_lookup import fitting_lookup_pallas
-
-    plan = make_plan(int(idx.keys.shape[0]), int(idx.error))
-    keys_padded = pad_keys(idx.keys, plan)
+def _pallas_bucketize(idx: DeviceIndex, queries: jax.Array, plan: LookupPlan,
+                      qcap: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """The XLA prelude shared by :func:`pallas_lookup` and
+    :func:`pallas_search`: router + interpolation -> window starts -> queries
+    bucketed by the key block their window starts in.  Returns ``(q_b,
+    qlo_b, src_b)``: per-block query values (+inf filler), global window
+    starts, and source indices (-1 filler; a query missing from ``src_b``
+    overflowed its bucket and must be answered by the caller's fallback)."""
     nq = queries.shape[0]
-    queries = queries.astype(jnp.float32)
-
-    # --- XLA prelude: router + interpolation -> window starts -> buckets
     pred = predict_positions(idx, queries)
     qlo = jnp.clip(pred - idx.error, 0, plan.n_pad - plan.window).astype(jnp.int32)
     blk = qlo // plan.kb                                    # owning key block
@@ -179,6 +245,25 @@ def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
     q_b = q_b.at[blk_s, slot_c].set(jnp.where(ok, queries[order], jnp.inf))
     qlo_b = qlo_b.at[blk_s, slot_c].set(jnp.where(ok, qlo[order], 0))
     src_b = src_b.at[blk_s, slot_c].set(jnp.where(ok, order.astype(jnp.int32), -1))
+    return q_b, qlo_b, src_b
+
+
+def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
+                  interpret: bool = True, fallback: bool = True) -> jax.Array:
+    """Batched point lookup via the Pallas kernel.  Returns ranks (-1 absent).
+
+    XLA prelude (router + interpolation + bucketing) -> Pallas compare-reduce
+    kernel -> scatter-back + bisect fallback for bucket overflow.  ``idx.error``
+    must be a Python int (it sizes the kernel window), so jit this via a
+    closure over ``idx`` rather than passing it as a traced argument."""
+    # lazy: repro.kernels imports this module for its thin wrappers
+    from repro.kernels.fitting_lookup import fitting_lookup_pallas
+
+    plan = make_plan(int(idx.keys.shape[0]), int(idx.error))
+    keys_padded = pad_keys(idx.keys, plan)
+    nq = queries.shape[0]
+    queries = queries.astype(jnp.float32)
+    q_b, qlo_b, src_b = _pallas_bucketize(idx, queries, plan, qcap)
 
     # --- Pallas kernel over key blocks
     rank_b, found_b = fitting_lookup_pallas(
@@ -207,15 +292,65 @@ def pallas_lookup(idx: DeviceIndex, queries: jax.Array, *, qcap: int = 256,
     return snap_leftmost(idx.keys, queries, res, res >= 0)
 
 
+def pallas_search(idx: DeviceIndex, queries: jax.Array, side: str = "left", *,
+                  qcap: int = 256, interpret: bool = True) -> jax.Array:
+    """Batched insertion-rank search via the Pallas compare-reduce kernel.
+
+    Same XLA prelude (router + interpolation + bucketing) and kernel geometry
+    as :func:`pallas_lookup`; the kernel's masked compare-reduce simply counts
+    with the side's comparison (``<`` for left, ``<=`` for right) so
+    ``rank = window_start + count`` is the searchsorted insertion rank.
+    Bucket-overflow queries fall back to the XLA bisect search; the final
+    :func:`snap_side` resolves duplicate runs extending past the window."""
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    # lazy: repro.kernels imports this module for its thin wrappers
+    from repro.kernels.fitting_lookup import fitting_lookup_pallas
+
+    plan = make_plan(int(idx.keys.shape[0]), int(idx.error))
+    keys_padded = pad_keys(idx.keys, plan)
+    nq = queries.shape[0]
+    queries = queries.astype(jnp.float32)
+    q_b, qlo_b, src_b = _pallas_bucketize(idx, queries, plan, qcap)
+
+    rank_b, _ = fitting_lookup_pallas(
+        keys_padded, q_b, qlo_b, kb=plan.kb, window=plan.window,
+        interpret=interpret, side=side)
+
+    res = jnp.full((nq,), jnp.iinfo(jnp.int32).min, jnp.int32)
+    flat_src = src_b.reshape(-1)
+    flat_ans = rank_b.reshape(-1)
+    good = flat_src >= 0
+    res = res.at[jnp.clip(flat_src, 0, None)].max(
+        jnp.where(good, flat_ans, jnp.iinfo(jnp.int32).min))
+    need = res == jnp.iinfo(jnp.int32).min       # bucket-overflow queries
+    fb = jax.lax.cond(jnp.any(need),
+                      lambda: xla_search(idx, queries, side, "bisect"),
+                      lambda: res)
+    res = jnp.where(need, fb, res)
+    return snap_side(idx.keys, queries, res, side)
+
+
 # ------------------------------------------------------------------- registry
 @runtime_checkable
 class LookupEngine(Protocol):
-    """A compiled lookup path over one immutable SegmentTable snapshot."""
+    """A compiled lookup path over one immutable SegmentTable snapshot.
+
+    Every registered backend also implements the query plane's primitive
+    ``search(queries, side)`` (insertion ranks) and, via the
+    :class:`repro.index.query.QueryVerbs` mixin, the typed verbs derived
+    from it (``point`` / ``range`` / ``count`` / ``predecessor`` /
+    ``successor``)."""
     backend: str
     table: SegmentTable
 
     def lookup(self, queries) -> np.ndarray:
         """Global rank of each query, -1 if absent (host array out)."""
+        ...
+
+    def search(self, queries, side: str = "left") -> np.ndarray:
+        """``searchsorted(keys, queries, side)`` insertion ranks (host array
+        out): the one primitive every typed query verb derives from."""
         ...
 
 
@@ -246,7 +381,7 @@ def make_engine(table: SegmentTable, backend: str = "numpy", **opts) -> LookupEn
 
 
 @register_backend("numpy")
-class NumpyEngine:
+class NumpyEngine(QueryVerbs):
     def __init__(self, table: SegmentTable):
         self.table = table
         self.fn = functools.partial(numpy_lookup, table)
@@ -254,19 +389,44 @@ class NumpyEngine:
     def lookup(self, queries) -> np.ndarray:
         return self.fn(queries)
 
+    def search(self, queries, side: str = "left") -> np.ndarray:
+        return numpy_search(self.table, queries, side)
 
-class _DeviceEngine:
-    """Shared scaffolding: convert the table once, jit a closure over it."""
+
+class _DeviceEngine(QueryVerbs):
+    """Shared scaffolding: convert the table once, jit a closure over it.
+
+    ``self.fn`` is the jitted point-lookup; ``_search_impl(queries, side=)``
+    is the backend's un-jitted search primitive, jitted lazily per side on
+    first use (``side`` is static: it picks the comparison op)."""
 
     def __init__(self, table: SegmentTable):
         self.table = table
         self.index = device_index(table)
+        self._search_fns: dict[str, Callable] = {}
+        self._search_lock = threading.Lock()
 
     def lookup(self, queries) -> np.ndarray:
         if self.table.n_keys == 0:   # gathers on a 0-length device array are
             q = np.asarray(queries)  # undefined; an empty table always misses
             return np.full(q.shape, -1, np.int64)
         return np.asarray(self.fn(jnp.asarray(queries, jnp.float32)))
+
+    def search(self, queries, side: str = "left") -> np.ndarray:
+        if side not in ("left", "right"):
+            raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+        if self.table.n_keys == 0:   # empty table: every rank is 0
+            return np.zeros(np.asarray(queries).shape, np.int64)
+        fn = self._search_fns.get(side)
+        if fn is None:
+            with self._search_lock:  # don't jit the same side twice
+                fn = self._search_fns.get(side)
+                if fn is None:
+                    fn = jax.jit(functools.partial(self._search_impl,
+                                                   side=side))
+                    self._search_fns[side] = fn
+        out = np.asarray(fn(jnp.asarray(queries, jnp.float32)))
+        return out.astype(np.int64)
 
 
 @register_backend("xla-window")
@@ -275,6 +435,8 @@ class XlaWindowEngine(_DeviceEngine):
         super().__init__(table)
         self.fn = jax.jit(functools.partial(xla_lookup, self.index,
                                             strategy="window"))
+        self._search_impl = functools.partial(xla_search, self.index,
+                                              strategy="window")
 
 
 @register_backend("xla-bisect")
@@ -283,6 +445,8 @@ class XlaBisectEngine(_DeviceEngine):
         super().__init__(table)
         self.fn = jax.jit(functools.partial(xla_lookup, self.index,
                                             strategy="bisect"))
+        self._search_impl = functools.partial(xla_search, self.index,
+                                              strategy="bisect")
 
 
 @register_backend("pallas")
@@ -293,10 +457,12 @@ class PallasEngine(_DeviceEngine):
         self.fn = jax.jit(functools.partial(pallas_lookup, self.index,
                                             qcap=qcap, interpret=interpret,
                                             fallback=fallback))
+        self._search_impl = functools.partial(pallas_search, self.index,
+                                              qcap=qcap, interpret=interpret)
 
 
 @register_backend("dispatch")
-class DispatchEngine:
+class DispatchEngine(QueryVerbs):
     """Batch-size-aware backend dispatch over one snapshot.
 
     The backends trade fixed cost against per-query cost: numpy wins for tiny
@@ -371,3 +537,9 @@ class DispatchEngine:
 
     def lookup(self, queries) -> np.ndarray:
         return self.engine_for(int(np.size(queries))).lookup(queries)
+
+    def search(self, queries, side: str = "left") -> np.ndarray:
+        """The query plane's primitive, routed by batch size exactly like
+        ``lookup`` (every tier returns identical insertion ranks for exact-f32
+        workloads, so dispatch stays semantics-preserving)."""
+        return self.engine_for(int(np.size(queries))).search(queries, side)

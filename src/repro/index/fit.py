@@ -48,7 +48,8 @@ from repro.core.cost_model import (CostParams, TPUCostParams,
                                    choose_error_for_space,
                                    dispatch_thresholds, latency_ns,
                                    latency_ns_tpu, learn_segments_fn,
-                                   size_bytes)
+                                   range_latency_ns, range_latency_ns_tpu,
+                                   scan_ns_per_row_tpu, size_bytes)
 
 # Default error sweep: the paper's Sec. 7 evaluation range (powers of two so
 # learn_segments_fn interpolates log-log between measured segmentations).
@@ -69,7 +70,7 @@ class InfeasibleSpecError(ValueError):
     callers can relax the spec programmatically."""
 
     def __init__(self, objective: str, budget: float, tightest: float,
-                 unit: str):
+                 unit: str, note: str = ""):
         self.objective = objective
         self.budget = budget
         self.tightest = tightest
@@ -78,7 +79,7 @@ class InfeasibleSpecError(ValueError):
             f"{budget:g} {unit}; the tightest achievable {objective} over "
             f"the candidate sweep is {tightest:g} {unit} -- relax the "
             f"budget to at least that, widen candidate_errors, or switch "
-            f"objective")
+            f"objective{note}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +106,14 @@ class FitSpec:
     * ``duplicate_density`` -- expected fraction of duplicated keys in
       [0, 1); caps the shard count (duplicate-safe cuts need at least one
       distinct key run per shard).
+    * ``range_fraction`` -- expected fraction of queries that are range
+      scans (in [0, 1]); folds the range-scan cost term (fixed predecessor
+      cost + ``range_scan_rows`` x per-row scan marginal) into every
+      candidate's predicted latency and into the dispatch-threshold
+      crossings, so scan-heavy workloads plan a coarser error / earlier
+      device dispatch than point-only ones.
+    * ``range_scan_rows`` -- expected rows returned per range scan (the
+      selectivity hint the scan term multiplies).
     * ``key_sample`` -- a representative key sample, so a plan can be
       computed (and the spec shipped in a config file) before the full key
       set exists; ``plan(None, spec)`` uses it.  ``n_keys_hint`` scales the
@@ -124,6 +133,8 @@ class FitSpec:
     batch_sizes: tuple[int, ...] | None = None
     insert_rate: float = 0.0
     duplicate_density: float = 0.0
+    range_fraction: float = 0.0
+    range_scan_rows: int = 256
     key_sample: tuple[float, ...] | None = None
     n_keys_hint: int | None = None
     # hardware profile
@@ -163,6 +174,14 @@ class FitSpec:
         if not 0.0 <= self.duplicate_density < 1.0:
             raise ValueError(f"duplicate_density must be in [0, 1), got "
                              f"{self.duplicate_density!r}")
+        if not 0.0 <= self.range_fraction <= 1.0:
+            raise ValueError(f"range_fraction must be in [0, 1], got "
+                             f"{self.range_fraction!r} (it is the expected "
+                             "fraction of queries that are range scans)")
+        if self.range_scan_rows < 1:
+            raise ValueError(f"range_scan_rows must be >= 1, got "
+                             f"{self.range_scan_rows!r} (expected rows per "
+                             "range scan)")
         if self.key_sample is not None and len(self.key_sample) == 0:
             raise ValueError("key_sample must be non-empty when given (pass "
                              "None to require keys at plan time)")
@@ -321,6 +340,12 @@ class IndexPlan:
                 f"  dispatch tiers (cost-model crossings): host <= "
                 f"{self.small_max} < device-bisect < {self.large_min} <= "
                 f"pallas")
+        if self.spec is not None and self.spec.range_fraction > 0:
+            lines.append(
+                f"  scan-heavy workload: range_fraction="
+                f"{self.spec.range_fraction:g} x ~{self.spec.range_scan_rows}"
+                f" rows/scan folded into every candidate latency and the "
+                f"dispatch crossings")
         if self.candidates:
             lines.append("  candidates (predicted by the Sec. 6 model):")
             lines.append("    error  segments  latency_ns    size_bytes")
@@ -395,7 +420,15 @@ def _effective_scorers(spec: FitSpec, segments_fn):
     windows than the bare error), and the paper's buffer-scan term uses the
     planned buffer.  Snapshot serving never scans write-side buffers during
     lookups (they are invisible until publish), so that term is pure
-    pessimism: a budget met under this scoring is met by the built index."""
+    pessimism: a budget met under this scoring is met by the built index.
+
+    A ``range_fraction`` workload blends the range-scan cost term in: that
+    fraction of queries pays the range model (predecessor locate + per-row
+    scan over ``range_scan_rows`` rows) instead of the point model, so a
+    scan-heavy spec is scored -- and budgeted -- on the workload it will
+    actually serve."""
+    rf, rows = spec.range_fraction, spec.range_scan_rows
+
     def eff_error(e: int) -> int:
         return max(1, e - planned_buffer(e))
 
@@ -404,14 +437,31 @@ def _effective_scorers(spec: FitSpec, segments_fn):
 
     if spec.hardware == "tpu":
         def eff_latency(e: int, s: int) -> float:
-            return latency_ns_tpu(eff_error(e), s, spec.tpu_params)
+            point = latency_ns_tpu(eff_error(e), s, spec.tpu_params)
+            if rf == 0.0:
+                return point
+            rng = range_latency_ns_tpu(eff_error(e), s, spec.tpu_params, rows)
+            return (1.0 - rf) * point + rf * rng
     else:
         def eff_latency(e: int, s: int) -> float:
             p = dataclasses.replace(spec.cpu_params,
                                     buffer_size=planned_buffer(e))
-            return latency_ns(eff_error(e), s, p)
+            point = latency_ns(eff_error(e), s, p)
+            if rf == 0.0:
+                return point
+            rng = range_latency_ns(eff_error(e), s, p, rows)
+            return (1.0 - rf) * point + rf * rng
 
     return eff_segments, eff_latency
+
+
+def _scan_term_ns(spec: FitSpec) -> float:
+    """The workload's amortized range-scan contribution to per-query latency
+    (the error-independent part: fraction x rows x per-row marginal)."""
+    per_row = (scan_ns_per_row_tpu(spec.tpu_params)
+               if spec.hardware == "tpu" else
+               spec.cpu_params.scan_ns_per_row)
+    return spec.range_fraction * spec.range_scan_rows * per_row
 
 
 def _plan_backend(spec: FitSpec, small_max: int, large_min: int) -> str:
@@ -462,8 +512,19 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
         chosen = choose_error_for_latency(budget, eff_segments, cands, p,
                                           latency_fn=eff_latency)
         if chosen is None:
-            raise InfeasibleSpecError("latency", budget, min(lats.values()),
-                                      "ns")
+            tightest = min(lats.values())
+            note = ""
+            scan = _scan_term_ns(spec)
+            if scan >= tightest / 2:
+                # the budget is lost to scanning, not to locating: say so
+                note = (f"; note the range-scan term alone contributes "
+                        f"{scan:g} ns of that (range_fraction="
+                        f"{spec.range_fraction:g} x range_scan_rows="
+                        f"{spec.range_scan_rows} rows), which no error "
+                        f"parameter can reduce -- lower the scan "
+                        f"selectivity hints or budget for the scans")
+            raise InfeasibleSpecError("latency", budget, tightest, "ns",
+                                      note=note)
         feasible = {e: lats[e] <= budget for e, _ in rows}
     elif spec.objective == "space":
         budget = float(spec.storage_budget_bytes)
@@ -484,7 +545,8 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
     # DispatchEngine derives from table.error/n_segments
     small_max, large_min = dispatch_thresholds(
         max(1, chosen - buffer_size), n_segments,
-        spec.cpu_params, spec.tpu_params)
+        spec.cpu_params, spec.tpu_params,
+        range_fraction=spec.range_fraction, scan_rows=spec.range_scan_rows)
     n_shards = _plan_shards(spec, arr.shape[0])
     backend = _plan_backend(spec, small_max, large_min)
     # auto-publish roughly once per second of expected write traffic, kept

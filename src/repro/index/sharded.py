@@ -57,6 +57,7 @@ import numpy as np
 from repro.index.table import (SegmentTable, route_keys, shard_boundaries,
                                shard_partition)
 
+from .query import PointResult, RangeResult, check_range, check_side
 from .snapshot import ServingHandle, Snapshot, SnapshotPublisher
 
 if TYPE_CHECKING:  # runtime import is lazy (fit builds services via plans)
@@ -250,6 +251,11 @@ class ShardedIndexService:
         self._rebalances = 0
         self._rebalance_skipped = 0
         self._last_rebalance: dict | None = None
+        # per-shape query counters (queries for point-shaped verbs, scans for
+        # range, bound-pairs for count) -- see service_stats()
+        self._query_counts = {"points": 0, "ranges": 0, "counts": 0,
+                              "predecessors": 0, "successors": 0,
+                              "searches": 0}
 
         bounds, splits = shard_partition(keys, n_shards)
         offsets = np.concatenate(
@@ -328,15 +334,21 @@ class ShardedIndexService:
 
     def service_stats(self) -> dict:
         """Service-level observability: ShardSet version, rebalance counters
-        (completed / auto-skipped), the last rebalance summary, and the
-        current write-side imbalance."""
+        (completed / auto-skipped), the last rebalance summary, the current
+        write-side imbalance, and the per-shape query counters
+        (``query_counts``: queries served through each typed verb --
+        ``points`` covers ``lookup``/``point``, ``ranges`` counts scans,
+        ``counts`` counts bound pairs, ``searches`` direct calls to the raw
+        primitive -- for workload dashboards and for checking a deployed
+        ``FitSpec.range_fraction`` against reality)."""
         return {"version": self._shard_set.version,
                 "n_shards": self.n_shards,
                 "imbalance": self.imbalance(),
                 "rebalances": self._rebalances,
                 "rebalance_skipped": self._rebalance_skipped,
                 "last_rebalance": self._last_rebalance,
-                "pending_inserts": self.pending_inserts}
+                "pending_inserts": self.pending_inserts,
+                "query_counts": dict(self._query_counts)}
 
     # ------------------------------------------------------------- write path
     def insert(self, key: float, value=None) -> None:
@@ -511,6 +523,7 @@ class ShardedIndexService:
         per backend inside each handle, so pinning is an O(1) dict hit after
         the first call)."""
         backend = backend or self.default_backend
+        self._query_counts["points"] += int(np.size(queries))
         ss = self._shard_set                        # pin the routing view
         if len(ss.handles) == 1:                    # the IndexService path
             return ss.handles[0].lookup(queries, backend)
@@ -525,3 +538,128 @@ class ShardedIndexService:
             local = np.asarray(engines[d].lookup(q[mask]), np.int64)
             out[mask] = np.where(local >= 0, local + offsets[d], -1)
         return out
+
+    # ------------------------------------------------------ typed query plane
+    def _pin_view(self, backend: str | None):
+        """Pin ONE consistent read view: the current ShardSet, plus each
+        shard's (snapshot, engine) resolved from the same per-handle pin, so
+        routing, rank offsets, materialized keys/payloads and answers all
+        come from a single epoch combination -- a concurrent publish or
+        rebalance can never tear a scan that already pinned its view."""
+        backend = backend or self.default_backend
+        ss = self._shard_set
+        states = [h._pin() for h in ss.handles]
+        engines = [h._engine_from(st, backend)
+                   for h, st in zip(ss.handles, states)]
+        snaps = [st[0] for st in states]
+        sizes = np.asarray([s.n_keys for s in snaps], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
+        return ss, snaps, engines, offsets, int(sizes.sum())
+
+    def _search_view(self, view, queries, side: str) -> np.ndarray:
+        """Global insertion ranks against a pinned view: route each query,
+        bounded-search its shard, lift by the preceding snapshot key counts.
+        Exact because shard cuts are duplicate-safe: no run straddles a
+        shard, so local searchsorted + offset == global searchsorted."""
+        ss, _, engines, offsets, _ = view
+        q = np.asarray(queries, np.float64)
+        sid = route_keys(ss.boundaries, q)
+        out = np.empty(q.shape, np.int64)
+        for d in np.unique(sid):
+            mask = sid == d
+            out[mask] = np.asarray(engines[d].search(q[mask], side),
+                                   np.int64) + offsets[d]
+        return out
+
+    def search(self, queries, side: str = "left",
+               backend: str | None = None) -> np.ndarray:
+        """Global ``searchsorted(all_keys, queries, side)`` insertion ranks
+        across the current shard snapshots (the query plane's primitive)."""
+        check_side(side)
+        self._query_counts["searches"] += int(np.size(queries))
+        return self._search_view(self._pin_view(backend), queries, side)
+
+    def point(self, queries, backend: str | None = None) -> PointResult:
+        """Typed membership: global leftmost rank + found flag per query."""
+        view = self._pin_view(backend)
+        _, _, engines, offsets, _ = view
+        ss = view[0]
+        q = np.asarray(queries, np.float64)
+        self._query_counts["points"] += int(q.size)
+        sid = route_keys(ss.boundaries, q)
+        rank = np.full(q.shape, -1, np.int64)
+        found = np.zeros(q.shape, bool)
+        for d in np.unique(sid):
+            mask = sid == d
+            res = engines[d].point(q[mask])
+            found[mask] = res.found
+            rank[mask] = np.where(res.found, res.rank + offsets[d], -1)
+        return PointResult(rank=rank, found=found)
+
+    def count(self, lo, hi, backend: str | None = None) -> np.ndarray:
+        """Keys in the inclusive ``[lo, hi]`` ranges (vectorized), resolved
+        against one pinned view so both bounds see the same epochs."""
+        view = self._pin_view(backend)
+        lo = np.asarray(lo, np.float64)
+        hi = np.asarray(hi, np.float64)
+        counts = np.maximum(self._search_view(view, hi, "right")
+                            - self._search_view(view, lo, "left"), 0)
+        self._query_counts["counts"] += int(counts.size)
+        return counts.astype(np.int64)
+
+    def range(self, lo, hi, *, materialize: bool = True,
+              backend: str | None = None) -> RangeResult:
+        """Inclusive ``[lo, hi]`` scan stitched across shards: the span may
+        start mid-shard A and end mid-shard D; per-shard local spans lift to
+        one global ``[lo_rank, hi_rank)`` via the pinned snapshot key counts,
+        and materialized keys (and payloads, for a non-clustered index)
+        concatenate in shard order -- all against the one pinned ShardSet,
+        so a concurrent rebalance never tears the scan."""
+        lo, hi = check_range(lo, hi)
+        view = self._pin_view(backend)
+        ss, snaps, engines, offsets, _ = view
+        self._query_counts["ranges"] += 1
+        lo_rank = int(self._search_view(view, np.asarray([lo]), "left")[0])
+        hi_rank = max(int(self._search_view(view, np.asarray([hi]),
+                                            "right")[0]), lo_rank)
+        keys = payload = None
+        if materialize:
+            d0 = int(route_keys(ss.boundaries, np.float64(lo)))
+            d1 = int(route_keys(ss.boundaries, np.float64(hi)))
+            k_parts, p_parts = [], []
+            for d in range(d0, d1 + 1):
+                n_d = snaps[d].n_keys
+                a = max(int(lo_rank - offsets[d]), 0) if d == d0 else 0
+                b = min(int(hi_rank - offsets[d]), n_d) if d == d1 else n_d
+                if b <= a:
+                    continue
+                k_parts.append(snaps[d].table.keys[a:b])
+                if snaps[d].payload is not None:
+                    p_parts.append(snaps[d].payload[a:b])
+            keys = (np.concatenate(k_parts) if k_parts
+                    else np.empty(0, np.float64))
+            if self.has_payload:
+                payload = (np.concatenate(p_parts) if p_parts
+                           else np.empty(0))
+        return RangeResult(lo=lo, hi=hi, lo_rank=lo_rank, hi_rank=hi_rank,
+                           keys=keys, payload=payload)
+
+    def predecessor(self, queries, backend: str | None = None) -> PointResult:
+        """Global rank of the largest key <= each query (rightmost
+        occurrence), found=False where every key is above the query."""
+        view = self._pin_view(backend)
+        q = np.asarray(queries, np.float64)
+        self._query_counts["predecessors"] += int(q.size)
+        rank = self._search_view(view, q, "right") - 1
+        found = rank >= 0
+        return PointResult(rank=np.where(found, rank, -1), found=found)
+
+    def successor(self, queries, backend: str | None = None) -> PointResult:
+        """Global rank of the smallest key >= each query (leftmost
+        occurrence), found=False where every key is below the query."""
+        view = self._pin_view(backend)
+        q = np.asarray(queries, np.float64)
+        self._query_counts["successors"] += int(q.size)
+        rank = self._search_view(view, q, "left")
+        found = rank < view[4]
+        return PointResult(rank=np.where(found, rank, -1), found=found)

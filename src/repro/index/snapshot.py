@@ -28,6 +28,7 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from .engine import LookupEngine, make_engine
+from .query import PointResult, RangeResult
 from .table import SegmentTable
 
 if TYPE_CHECKING:  # avoid a module-level cycle with repro.core
@@ -36,10 +37,16 @@ if TYPE_CHECKING:  # avoid a module-level cycle with repro.core
 
 @dataclasses.dataclass(frozen=True)
 class Snapshot:
-    """One published epoch of the index."""
+    """One published epoch of the index.
+
+    ``payload`` is the payload column parallel to ``table.keys`` for a
+    non-clustered index (None for the clustered layout), so range scans can
+    materialize values from the same immutable epoch they resolved ranks
+    against."""
     table: SegmentTable
     epoch: int
     n_refit: int  # dirty segments re-segmented by this publish
+    payload: np.ndarray | None = None
 
     @property
     def n_keys(self) -> int:
@@ -71,7 +78,8 @@ class SnapshotPublisher:
         n_refit = self.tree.flush()
         self._epoch += 1
         table = self.tree.as_table(epoch=self._epoch)
-        return Snapshot(table=table, epoch=self._epoch, n_refit=n_refit)
+        return Snapshot(table=table, epoch=self._epoch, n_refit=n_refit,
+                        payload=self.tree.payload_column())
 
 
 class ServingHandle:
@@ -103,7 +111,14 @@ class ServingHandle:
         self._state = (snapshot, {})
 
     def engine(self, backend: str = "numpy") -> LookupEngine:
-        snapshot, engines = self._pin()
+        return self._engine_from(self._pin(), backend)
+
+    def _engine_from(self, state: tuple[Snapshot, dict[str, LookupEngine]],
+                     backend: str) -> LookupEngine:
+        """Engine for an already-pinned (snapshot, cache) state, so a verb
+        that also reads the snapshot (e.g. its payload column) resolves both
+        against one consistent epoch even if ``install`` lands mid-call."""
+        snapshot, engines = state
         eng = engines.get(backend)
         if eng is None:
             with self._lock:
@@ -117,6 +132,39 @@ class ServingHandle:
     def lookup(self, queries, backend: str = "numpy") -> np.ndarray:
         """Rank of each query in the current snapshot, -1 if absent."""
         return self.engine(backend).lookup(queries)
+
+    # ------------------------------------------------------- typed query plane
+    def search(self, queries, side: str = "left",
+               backend: str = "numpy") -> np.ndarray:
+        """Insertion ranks (``searchsorted`` semantics) in the current
+        snapshot -- the primitive every verb below derives from."""
+        return self.engine(backend).search(queries, side)
+
+    def point(self, queries, backend: str = "numpy") -> PointResult:
+        return self.engine(backend).point(queries)
+
+    def count(self, lo, hi, backend: str = "numpy") -> np.ndarray:
+        return self.engine(backend).count(lo, hi)
+
+    def range(self, lo, hi, *, materialize: bool = True,
+              backend: str = "numpy") -> RangeResult:
+        """Inclusive ``[lo, hi]`` scan over the current snapshot; payloads
+        (non-clustered index) materialize from the same pinned snapshot the
+        ranks were resolved against."""
+        state = self._pin()
+        snapshot = state[0]
+        res = self._engine_from(state, backend).range(lo, hi,
+                                                      materialize=materialize)
+        if materialize and snapshot.payload is not None:
+            res = dataclasses.replace(
+                res, payload=snapshot.payload[res.lo_rank:res.hi_rank].copy())
+        return res
+
+    def predecessor(self, queries, backend: str = "numpy") -> PointResult:
+        return self.engine(backend).predecessor(queries)
+
+    def successor(self, queries, backend: str = "numpy") -> PointResult:
+        return self.engine(backend).successor(queries)
 
     def _pin(self) -> tuple[Snapshot, dict[str, LookupEngine]]:
         state = self._state

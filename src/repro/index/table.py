@@ -193,6 +193,61 @@ def numpy_lookup(table: SegmentTable, queries) -> np.ndarray:
     return np.where(ok, lo, -1).astype(np.int64)
 
 
+def numpy_search(table: SegmentTable, queries, side: str = "left") -> np.ndarray:
+    """Host bounded-window rank search: the ``numpy`` backend's primitive for
+    the typed query plane (see ``repro.index.query``).
+
+    Returns ``np.searchsorted(table.keys, queries, side=side)`` -- the
+    insertion rank of every query -- computed with the same interpolate +
+    log2(2*err) halving steps as :func:`numpy_lookup` instead of a full-column
+    bisect.  ``side="left"`` is the rank of the first key >= q (the leftmost
+    occurrence when q is present), ``side="right"`` one past the last key
+    <= q; every query verb (point / range / count / predecessor / successor)
+    derives from these two.
+
+    The +-error window only bounds ranks of *in-window* insertion points; a
+    duplicate run straddling the routed segment (or longer than the window)
+    parks the bounded result inside the run, which the side-specific snap at
+    the end detects (left: the left neighbour still equals q; right: the
+    landing key itself still equals q) and repairs with a full ``searchsorted``
+    over just the flagged queries -- the generalization of the
+    ``numpy_lookup`` leftmost fix to both sides.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    q = np.asarray(queries, np.float64)
+    keys = table.keys
+    n = keys.shape[0]
+    if n == 0:                      # empty table: every rank is 0
+        return np.zeros(q.shape, np.int64)
+    if q.size <= 8:
+        # tiny probes (range/predecessor bounds are 1-2 queries): one C-level
+        # full-column bisect costs less than the ~log2(2e) vectorized loop
+        # iterations below ever could in numpy dispatch overhead alone;
+        # same contract, so the window path stays the batch implementation
+        return np.searchsorted(keys, q, side=side).astype(np.int64)
+    lo, hi = table.window(q)
+    steps = max(1, math.ceil(math.log2(2 * table.error + 2)))
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        mid_c = np.minimum(mid, max(n - 1, 0))
+        if side == "left":
+            go_right = (keys[mid_c] < q) & (lo < hi)
+        else:
+            go_right = (keys[mid_c] <= q) & (lo < hi)
+        lo = np.where(go_right, mid + 1, lo)
+        hi = np.where(go_right, hi, mid)
+    if side == "left":
+        fix = (lo > 0) & (keys[np.maximum(lo - 1, 0)] == q)
+    else:
+        fix = (lo < n) & (keys[np.minimum(lo, n - 1)] == q)
+    if np.any(fix):
+        hits = np.flatnonzero(fix)
+        lo = lo.copy()
+        lo.flat[hits] = np.searchsorted(keys, q.flat[hits], side=side)
+    return lo.astype(np.int64)
+
+
 def shard_cut_indices(keys: np.ndarray, n_shards: int) -> np.ndarray:
     """Duplicate-safe equal-count cut indices into sorted ``keys``.
 

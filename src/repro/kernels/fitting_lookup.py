@@ -32,7 +32,8 @@ from jax.experimental import pallas as pl
 
 
 def _lookup_kernel(keys_a_ref, keys_b_ref, q_ref, qlo_ref,
-                   rank_ref, found_ref, *, kb: int, window: int):
+                   rank_ref, found_ref, *, kb: int, window: int,
+                   side: str = "left"):
     b = pl.program_id(0)
     base = b * kb
     keys2 = jnp.concatenate([keys_a_ref[...], keys_b_ref[...]])        # (2*KB,)
@@ -41,15 +42,22 @@ def _lookup_kernel(keys_a_ref, keys_b_ref, q_ref, qlo_ref,
     j_global = base + jax.lax.iota(jnp.int32, 2 * kb)                  # (2*KB,)
     in_win = ((j_global[None, :] >= qlo[:, None]) &
               (j_global[None, :] < qlo[:, None] + window))             # (QCAP, 2KB)
-    lt = in_win & (keys2[None, :] < q[:, None])
+    # side is static: "left" counts keys < q (rank of the first key >= q),
+    # "right" counts keys <= q (one past the last key <= q) -- the same
+    # masked compare-reduce serves point lookups and both search sides
+    if side == "left":
+        cnt = in_win & (keys2[None, :] < q[:, None])
+    else:
+        cnt = in_win & (keys2[None, :] <= q[:, None])
     eq = in_win & (keys2[None, :] == q[:, None])
-    rank_ref[0, :] = qlo + jnp.sum(lt.astype(jnp.int32), axis=1)
+    rank_ref[0, :] = qlo + jnp.sum(cnt.astype(jnp.int32), axis=1)
     found_ref[0, :] = jnp.any(eq, axis=1)
 
 
 def fitting_lookup_pallas(keys_padded: jax.Array, q_bucketed: jax.Array,
                           qlo_bucketed: jax.Array, *, kb: int, window: int,
-                          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                          interpret: bool = True, side: str = "left"
+                          ) -> tuple[jax.Array, jax.Array]:
     """Run the kernel over all key blocks.
 
     Args:
@@ -59,8 +67,12 @@ def fitting_lookup_pallas(keys_padded: jax.Array, q_bucketed: jax.Array,
                     (must satisfy qlo // KB == block row).
       kb:           key block size (multiple of 128, >= window).
       window:       2*error + 2.
+      side:         "left" counts keys < q (point lookups and left search),
+                    "right" counts keys <= q (right search); static.
     Returns:
-      rank:  (n_blocks, QCAP) i32 -- global rank of each bucketed query.
+      rank:  (n_blocks, QCAP) i32 -- global rank of each bucketed query
+             (the searchsorted insertion rank when the true rank is in the
+             window; the wrapper's snap repairs straddling duplicate runs).
       found: (n_blocks, QCAP) bool.
     """
     n_blocks, qcap = q_bucketed.shape
@@ -81,7 +93,7 @@ def fitting_lookup_pallas(keys_padded: jax.Array, q_bucketed: jax.Array,
             pl.BlockSpec((1, qcap), lambda b: (b, 0)),
         ],
     )
-    kernel = functools.partial(_lookup_kernel, kb=kb, window=window)
+    kernel = functools.partial(_lookup_kernel, kb=kb, window=window, side=side)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

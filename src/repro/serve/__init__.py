@@ -1,11 +1,14 @@
 """Serving steps, paged KV cache, batching, and index snapshot serving.
 
-The SLO-driven construction path (``FitSpec`` -> ``open_index``) is
-re-exported from ``repro.index.fit`` so serving code has one import."""
+The SLO-driven construction path (``FitSpec`` -> ``open_index``) and the
+typed query plane's result types (``PointResult``/``RangeResult``) are
+re-exported from ``repro.index`` so serving code has one import."""
 from repro.index.fit import FitSpec, IndexPlan, open_index
+from repro.index.query import PointResult, RangeResult
 from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
 
 from .index_service import IndexService
 
-__all__ = ["FitSpec", "IndexPlan", "IndexService", "ShardSet",
-           "ShardedIndexService", "ShardStats", "open_index"]
+__all__ = ["FitSpec", "IndexPlan", "IndexService", "PointResult",
+           "RangeResult", "ShardSet", "ShardedIndexService", "ShardStats",
+           "open_index"]

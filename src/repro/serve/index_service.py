@@ -28,6 +28,7 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
+from repro.index.query import PointResult, RangeResult
 from repro.index.sharded import ShardedIndexService
 from repro.index.snapshot import Snapshot
 
@@ -126,6 +127,42 @@ class IndexService:
     def lookup(self, queries, backend: str | None = None) -> np.ndarray:
         """Rank of each query in the current epoch's key column, -1 if absent."""
         return self._sharded.lookup(queries, backend)
+
+    # ------------------------------------------------------ typed query plane
+    # (see repro.index.query: every verb derives from the per-backend bounded
+    # search primitive, so answers are backend-independent by construction)
+    def search(self, queries, side: str = "left",
+               backend: str | None = None) -> np.ndarray:
+        """``searchsorted(keys, queries, side)`` insertion ranks in the
+        current epoch's key column."""
+        return self._sharded.search(queries, side, backend)
+
+    def point(self, queries, backend: str | None = None) -> PointResult:
+        """Typed membership: leftmost rank + found flag per query."""
+        return self._sharded.point(queries, backend)
+
+    def count(self, lo, hi, backend: str | None = None) -> np.ndarray:
+        """Keys in the inclusive ``[lo, hi]`` ranges (vectorized)."""
+        return self._sharded.count(lo, hi, backend)
+
+    def range(self, lo, hi, *, materialize: bool = True,
+              backend: str | None = None) -> RangeResult:
+        """Inclusive ``[lo, hi]`` scan: global rank span + materialized keys
+        (and payloads for a non-clustered index) from one pinned epoch."""
+        return self._sharded.range(lo, hi, materialize=materialize,
+                                   backend=backend)
+
+    def predecessor(self, queries, backend: str | None = None) -> PointResult:
+        """Rank of the largest key <= each query (rightmost occurrence)."""
+        return self._sharded.predecessor(queries, backend)
+
+    def successor(self, queries, backend: str | None = None) -> PointResult:
+        """Rank of the smallest key >= each query (leftmost occurrence)."""
+        return self._sharded.successor(queries, backend)
+
+    def service_stats(self) -> dict:
+        """Service-level observability incl. the per-shape query counters."""
+        return self._sharded.service_stats()
 
     @property
     def epoch(self) -> int:

@@ -59,3 +59,42 @@ def test_unknown_attribute_raises_attribute_error():
     for mod in (repro.index, repro.core):
         with pytest.raises(AttributeError, match="no attribute"):
             mod.definitely_not_exported
+
+
+# The typed query plane's verb surface (repro.index.query): every engine
+# backend, the serving handle, and both services must carry all of it --
+# a backend or layer silently missing a verb would fracture the "identical
+# answers everywhere" contract.
+QUERY_VERBS = ("search", "point", "range", "count", "predecessor",
+               "successor")
+
+
+def test_query_verbs_on_every_backend_and_serving_layer():
+    import numpy as np
+
+    import repro.index as ri
+    from repro.serve import IndexService
+
+    keys = np.arange(64, dtype=np.float64)
+    table = ri.SegmentTable.from_keys(keys, 8, assume_sorted=True)
+    for backend in ri.available_backends():
+        eng = ri.make_engine(table, backend)
+        missing = [v for v in QUERY_VERBS if not callable(getattr(eng, v,
+                                                                  None))]
+        assert not missing, f"backend {backend} lacks verbs {missing}"
+    svc = IndexService(keys, error=8)
+    sharded = ri.ShardedIndexService(keys, error=8, n_shards=2,
+                                     assume_sorted=True)
+    for layer in (svc, sharded, svc.handle):
+        missing = [v for v in QUERY_VERBS if not callable(getattr(layer, v,
+                                                                  None))]
+        assert not missing, f"{type(layer).__name__} lacks verbs {missing}"
+
+
+def test_query_result_types_exported_everywhere():
+    import repro.index
+    import repro.serve
+    for mod in (repro.index, repro.serve):
+        for name in ("PointResult", "RangeResult"):
+            assert name in mod.__all__, (mod.__name__, name)
+            assert getattr(mod, name) is not None

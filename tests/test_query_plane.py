@@ -1,0 +1,408 @@
+"""The typed query plane: search/point/range/count/predecessor/successor.
+
+Asserts (a) every registered backend derives identical answers from its
+bounded-window ``search`` primitive -- vs the ``np.searchsorted`` oracle on
+duplicate-heavy data, random bounds, empty ranges, and bounds outside the key
+domain; (b) the sharded service's stitched spans equal the single-table
+oracle, including duplicate runs straddling shard cuts and a scan issued
+concurrently with ``rebalance()``; (c) the legacy paths
+(``core/tree.range_query``, ``core/jax_index.range_count``) now share the
+``[lo, hi]``-inclusive boundary contract (leftmost rank at ``lo``, rightmost
+at ``hi``); and (d) the serving layers carry the verbs: payload
+materialization, epoch visibility, and the per-shape query counters.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FITingTree, build_device_index, range_count
+from repro.core.jax_index import bound
+from repro.index import (FitSpec, InfeasibleSpecError, SegmentTable,
+                         ShardedIndexService, make_engine, numpy_search, plan)
+from repro.serve import IndexService, open_index
+
+ALL_BACKENDS = ("numpy", "xla-window", "xla-bisect", "pallas", "dispatch")
+
+
+def _dup_heavy_keys(n=4000, seed=0, lim=2 ** 20, run_len=300):
+    """Sorted integer-valued keys (exact in f32) with heavy duplication plus
+    one run far longer than any error bound, so it straddles segments (and,
+    sharded, shard cuts)."""
+    rng = np.random.default_rng(seed)
+    base = rng.choice(lim, size=n, replace=False)
+    dups = rng.choice(base, size=n // 2)
+    long_run = np.full(run_len, base[n // 3])
+    return np.sort(np.concatenate([base, dups, long_run]).astype(np.float64))
+
+
+def _bounds_pool(keys, rng, m=40):
+    """Range bounds of every flavor: present keys (incl. duplicates), gap
+    values, and bounds outside the key domain on both sides."""
+    present = keys[rng.integers(0, keys.shape[0], m)]
+    gaps = np.round(rng.uniform(keys[0], keys[-1], m)) + 0.5
+    outside = np.array([keys[0] - 10.0, keys[0] - 1.0,
+                        keys[-1] + 1.0, keys[-1] + 10.0, -1e9, 1e9])
+    return np.concatenate([present, gaps, outside])
+
+
+# ------------------------------------------------------- backend agreement
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_search_matches_searchsorted_oracle(backend, side):
+    keys = _dup_heavy_keys(seed=1)
+    table = SegmentTable.from_keys(keys, 32, assume_sorted=True)
+    rng = np.random.default_rng(2)
+    q = _bounds_pool(keys, rng, m=80)
+    got = make_engine(table, backend).search(q, side)
+    np.testing.assert_array_equal(got, np.searchsorted(keys, q, side=side))
+
+
+def test_search_rejects_bad_side():
+    table = SegmentTable.from_keys(np.arange(64.0), 8, assume_sorted=True)
+    for backend in ALL_BACKENDS:
+        with pytest.raises(ValueError, match="side"):
+            make_engine(table, backend).search(np.asarray([1.0]), "middle")
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_count_and_predecessor_all_backends_vs_oracle(backend):
+    """Acceptance: count / predecessor / successor are bit-identical across
+    every backend, on random + empty + out-of-domain bounds."""
+    keys = _dup_heavy_keys(seed=3)
+    table = SegmentTable.from_keys(keys, 64, assume_sorted=True)
+    rng = np.random.default_rng(4)
+    eng = make_engine(table, backend)
+
+    lo = _bounds_pool(keys, rng)
+    hi = _bounds_pool(keys, rng)
+    want = np.maximum(np.searchsorted(keys, hi, "right")
+                      - np.searchsorted(keys, lo, "left"), 0)
+    np.testing.assert_array_equal(eng.count(lo, hi), want, err_msg=backend)
+    # inverted bounds are empty, never negative
+    assert np.all(eng.count(hi, lo - 1) >= 0)
+
+    q = _bounds_pool(keys, rng)
+    pred = eng.predecessor(q)
+    want_r = np.searchsorted(keys, q, "right") - 1
+    np.testing.assert_array_equal(pred.rank, np.where(want_r >= 0, want_r, -1))
+    np.testing.assert_array_equal(pred.found, want_r >= 0)
+    suc = eng.successor(q)
+    want_l = np.searchsorted(keys, q, "left")
+    ok = want_l < keys.shape[0]
+    np.testing.assert_array_equal(suc.rank, np.where(ok, want_l, -1))
+    np.testing.assert_array_equal(suc.found, ok)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_range_spans_and_materialization(backend):
+    keys = _dup_heavy_keys(seed=5)
+    table = SegmentTable.from_keys(keys, 32, assume_sorted=True)
+    eng = make_engine(table, backend)
+    rng = np.random.default_rng(6)
+    for _ in range(8):
+        lo, hi = np.sort(rng.choice(keys, 2))
+        res = eng.range(float(lo), float(hi))
+        exp = keys[(keys >= lo) & (keys <= hi)]     # [lo, hi] inclusive
+        assert res.lo_rank == np.searchsorted(keys, lo, "left")
+        assert res.hi_rank == np.searchsorted(keys, hi, "right")
+        assert res.count == exp.shape[0]
+        np.testing.assert_array_equal(res.keys, exp)
+    # empty range in a gap, inverted range, out-of-domain range
+    gap = float(np.round((keys[10] + keys[11]) / 2)) + 0.25
+    for lo, hi in ((gap, gap), (float(keys[100]), float(keys[50]) - 1),
+                   (keys[-1] + 5, keys[-1] + 9), (keys[0] - 9, keys[0] - 5)):
+        res = eng.range(lo, hi)
+        assert res.empty and res.count == 0 and res.keys.shape[0] == 0
+    res = eng.range(1.0, 2.0, materialize=False)
+    assert res.keys is None and res.payload is None
+    with pytest.raises(ValueError, match="NaN"):
+        eng.range(float("nan"), 1.0)
+
+
+def test_point_is_typed_lookup():
+    keys = _dup_heavy_keys(seed=7)
+    table = SegmentTable.from_keys(keys, 32, assume_sorted=True)
+    rng = np.random.default_rng(8)
+    q = _bounds_pool(keys, rng)
+    want = make_engine(table, "numpy").lookup(q)
+    for backend in ALL_BACKENDS:
+        res = make_engine(table, backend).point(q)
+        np.testing.assert_array_equal(res.rank, want, err_msg=backend)
+        np.testing.assert_array_equal(res.found, want >= 0, err_msg=backend)
+    assert make_engine(table, "numpy").point(q).n_found == int((want >= 0).sum())
+
+
+def test_empty_table_answers_every_verb():
+    table = SegmentTable.empty(16)
+    for backend in ALL_BACKENDS:
+        eng = make_engine(table, backend)
+        q = np.asarray([1.0, 2.0])
+        np.testing.assert_array_equal(eng.search(q, "left"), [0, 0])
+        np.testing.assert_array_equal(eng.search(q, "right"), [0, 0])
+        assert not eng.point(q).found.any()
+        np.testing.assert_array_equal(eng.count(q, q + 1), [0, 0])
+        res = eng.range(0.0, 10.0)
+        assert res.empty and res.keys.shape[0] == 0
+        assert not eng.predecessor(q).found.any()
+        assert not eng.successor(q).found.any()
+
+
+# ------------------------------------------------ legacy path reconciliation
+def test_tree_range_query_inclusive_and_duplicate_safe():
+    """The legacy scan started at lo's *routed* segment, dropping duplicates
+    of lo whose run began earlier; it now shares the plane's contract."""
+    keys = _dup_heavy_keys(seed=9)
+    t = FITingTree(keys, error=16, buffer_size=4, assume_sorted=True)
+    values, counts = np.unique(keys, return_counts=True)
+    run_val = float(values[np.argmax(counts)])      # the long run's value
+    got = t.range_query(run_val, run_val)           # exactly the run
+    exp = keys[keys == run_val]
+    np.testing.assert_array_equal(got, exp)
+    rng = np.random.default_rng(10)
+    for _ in range(6):
+        lo, hi = np.sort(rng.choice(keys, 2))
+        np.testing.assert_array_equal(
+            t.range_query(float(lo), float(hi)),
+            keys[(keys >= lo) & (keys <= hi)])
+    assert t.range_query(5.0, 4.0).shape[0] == 0    # inverted -> empty
+
+
+def test_jax_range_count_inclusive_and_duplicate_safe():
+    keys = _dup_heavy_keys(seed=11)
+    idx = build_device_index(keys, 32)
+    rng = np.random.default_rng(12)
+    lo = np.sort(keys[rng.integers(0, keys.shape[0], 16)]).astype(np.float32)
+    hi = np.sort(keys[rng.integers(0, keys.shape[0], 16)]).astype(np.float32)
+    lo, hi = np.minimum(lo, hi), np.maximum(lo, hi)
+    ks32 = keys.astype(np.float32)
+    want = (np.searchsorted(ks32, hi, "right")
+            - np.searchsorted(ks32, lo, "left"))
+    got = np.asarray(range_count(idx, jnp.asarray(lo), jnp.asarray(hi)))
+    np.testing.assert_array_equal(got, want)
+    # inverted ranges count 0 instead of going negative
+    got_inv = np.asarray(range_count(idx, jnp.asarray(hi + 1), jnp.asarray(lo)))
+    assert np.all(got_inv == 0)
+    # bound (the primitive the wrapper delegates to) is searchsorted-exact
+    # even for duplicate runs longer than the window
+    q = jnp.asarray(keys[rng.integers(0, keys.shape[0], 64)], jnp.float32)
+    for side in ("left", "right"):
+        np.testing.assert_array_equal(
+            np.asarray(bound(idx, q, side)),
+            np.searchsorted(ks32, np.asarray(q), side))
+
+
+def test_numpy_search_is_the_tree_page_oracle():
+    """numpy_search on the tree's snapshot == searchsorted over its pages."""
+    keys = _dup_heavy_keys(seed=13)
+    t = FITingTree(keys, error=32, assume_sorted=True)
+    table = t.as_table()
+    rng = np.random.default_rng(14)
+    q = _bounds_pool(keys, rng)
+    for side in ("left", "right"):
+        np.testing.assert_array_equal(numpy_search(table, q, side),
+                                      np.searchsorted(keys, q, side))
+
+
+# ----------------------------------------------------------- serving layers
+def test_service_range_sees_published_epochs_only():
+    keys = np.sort(np.random.default_rng(15).choice(
+        2 ** 20, size=3000, replace=False).astype(np.float64))
+    svc = IndexService(keys, error=32, buffer_size=8, backend="numpy")
+    gap = float(np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)[0])
+    before = svc.count([gap - 0.5], [gap + 0.5])[0]
+    assert before == 0
+    svc.insert(gap)
+    assert svc.count([gap - 0.5], [gap + 0.5])[0] == 0   # not yet published
+    svc.publish()
+    assert svc.count([gap - 0.5], [gap + 0.5])[0] == 1
+    res = svc.range(gap, gap)
+    assert res.count == 1 and res.keys[0] == gap
+    assert svc.predecessor(np.asarray([gap])).rank[0] == res.lo_rank
+    assert svc.successor(np.asarray([gap])).rank[0] == res.lo_rank
+
+
+def test_service_range_materializes_payload():
+    rng = np.random.default_rng(16)
+    keys = np.sort(rng.choice(2 ** 20, size=2000, replace=False)
+                   ).astype(np.float64)
+    payload = (keys * 7).astype(np.int64)       # recomputable from the key
+    svc = IndexService(keys, error=32, buffer_size=8, payload=payload)
+    lo, hi = float(keys[300]), float(keys[700])
+    res = svc.range(lo, hi)
+    np.testing.assert_array_equal(res.payload, (res.keys * 7).astype(np.int64))
+    # payloads ride through insert -> publish too
+    gap = float(np.setdiff1d(np.arange(2 ** 16, dtype=np.float64), keys)[0])
+    svc.insert(gap, int(gap * 7))
+    svc.publish()
+    res2 = svc.range(gap, gap)
+    assert res2.payload[0] == int(gap * 7)
+    # sharded payload stitching across a multi-shard span
+    sh = ShardedIndexService(keys, error=32, n_shards=4, buffer_size=8,
+                             payload=payload, assume_sorted=True)
+    wide = sh.range(float(keys[10]), float(keys[-10]))
+    np.testing.assert_array_equal(wide.payload,
+                                  (wide.keys * 7).astype(np.int64))
+
+
+def test_sharded_verbs_equal_single_table_oracle_on_duplicates():
+    """Acceptance: stitched cross-shard spans == the single-table oracle on
+    duplicate-heavy data, including runs straddling shard cuts."""
+    keys = _dup_heavy_keys(seed=17, run_len=500)
+    svc = ShardedIndexService(keys, error=32, n_shards=5, buffer_size=8,
+                              assume_sorted=True)
+    rng = np.random.default_rng(18)
+    q = _bounds_pool(keys, rng, m=60)
+    for side in ("left", "right"):
+        np.testing.assert_array_equal(svc.search(q, side),
+                                      np.searchsorted(keys, q, side))
+    lo = _bounds_pool(keys, rng)
+    hi = _bounds_pool(keys, rng)
+    want = np.maximum(np.searchsorted(keys, hi, "right")
+                      - np.searchsorted(keys, lo, "left"), 0)
+    np.testing.assert_array_equal(svc.count(lo, hi), want)
+    # spans crossing several shard boundaries, incl. the whole key space
+    for lo_k, hi_k in ((float(keys[5]), float(keys[-5])),
+                       (float(svc.boundaries[1]), float(svc.boundaries[-1])),
+                       (keys[0] - 100, keys[-1] + 100)):
+        res = svc.range(lo_k, hi_k)
+        exp = keys[(keys >= lo_k) & (keys <= hi_k)]
+        assert res.count == exp.shape[0]
+        np.testing.assert_array_equal(res.keys, exp)
+    pr = svc.predecessor(q)
+    want_r = np.searchsorted(keys, q, "right") - 1
+    np.testing.assert_array_equal(pr.rank, np.where(want_r >= 0, want_r, -1))
+
+
+def test_sharded_verbs_after_growth_and_rebalance():
+    """Spans stay oracle-exact after uneven shard growth and a forced recut
+    (fresh ShardSet + handles)."""
+    rng = np.random.default_rng(19)
+    base = np.sort(rng.choice(2 ** 20, size=6000, replace=False)
+                   ).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=3, buffer_size=32,
+                              assume_sorted=True)
+    fresh = np.setdiff1d(rng.choice(2 ** 20, size=6000, replace=False
+                                    ).astype(np.float64), base)
+    grow = fresh[fresh < svc.boundaries[1]][:800]    # skew shard 0
+    for k in grow:
+        svc.insert(float(k))
+    svc.publish()
+    union = np.sort(np.concatenate([base, grow]))
+    svc.rebalance(force=True)
+    lo_k, hi_k = float(union[100]), float(union[-100])
+    res = svc.range(lo_k, hi_k)
+    exp = union[(union >= lo_k) & (union <= hi_k)]
+    np.testing.assert_array_equal(res.keys, exp)
+    q = union[rng.integers(0, union.shape[0], 64)]
+    np.testing.assert_array_equal(svc.search(q, "left"),
+                                  np.searchsorted(union, q, "left"))
+
+
+@pytest.mark.slow
+def test_scan_concurrent_with_rebalance_never_tears():
+    """Acceptance: a range scan issued concurrently with rebalance() pins one
+    ShardSet -- a torn view would surface as an unsorted/out-of-bounds key
+    run or a count disagreeing with the materialized span."""
+    rng = np.random.default_rng(20)
+    base = np.sort(rng.choice(2 ** 20, size=10_000, replace=False)
+                   ).astype(np.float64)
+    svc = ShardedIndexService(base, error=64, n_shards=4, buffer_size=32,
+                              publish_every=256, auto_rebalance=True,
+                              skew_threshold=1.2, assume_sorted=True)
+    hot = np.setdiff1d(
+        rng.uniform(0, float(svc.boundaries[1]), 12_000).round(), base)[:5000]
+    lo_k, hi_k = float(base[1000]), float(base[-1000])
+    always = base[(base >= lo_k) & (base <= hi_k)]   # never removed
+    failures: list[str] = []
+    done = threading.Event()
+
+    def reader():
+        while not done.is_set():
+            res = svc.range(lo_k, hi_k)
+            if res.count != res.keys.shape[0]:
+                failures.append(f"count {res.count} != materialized "
+                                f"{res.keys.shape[0]} (torn span)")
+                return
+            if res.keys.shape[0] and (res.keys[0] < lo_k
+                                      or res.keys[-1] > hi_k):
+                failures.append("materialized keys escape [lo, hi]")
+                return
+            if np.any(np.diff(res.keys) < 0):
+                failures.append("unsorted key run (mixed epochs)")
+                return
+            if res.keys.shape[0] < always.shape[0]:
+                failures.append("published keys missing from span")
+                return
+
+    def writer():
+        for k in hot:
+            svc.insert(float(k))
+        svc.publish()
+
+    r = threading.Thread(target=reader)
+    w = threading.Thread(target=writer)
+    r.start(); w.start()
+    w.join(timeout=120)
+    done.set()
+    r.join(timeout=30)
+    assert not failures, failures
+    assert svc.service_stats()["rebalances"] >= 1    # the race actually ran
+    union = np.sort(np.concatenate([base, hot]))
+    exp = union[(union >= lo_k) & (union <= hi_k)]
+    np.testing.assert_array_equal(svc.range(lo_k, hi_k).keys, exp)
+
+
+# ------------------------------------------------------------ observability
+def test_query_counters_in_service_stats():
+    keys = np.sort(np.random.default_rng(21).choice(
+        2 ** 20, size=2000, replace=False).astype(np.float64))
+    svc = ShardedIndexService(keys, error=32, n_shards=2, assume_sorted=True)
+    assert svc.service_stats()["query_counts"] == {
+        "points": 0, "ranges": 0, "counts": 0,
+        "predecessors": 0, "successors": 0, "searches": 0}
+    svc.lookup(keys[:7])                            # legacy front door
+    svc.point(keys[:5])
+    svc.range(float(keys[0]), float(keys[10]))
+    svc.count(keys[:3], keys[1:4])
+    svc.predecessor(keys[:2])
+    svc.successor(keys[:1])
+    svc.search(keys[:4], "right")                   # the raw primitive
+    got = svc.service_stats()["query_counts"]
+    assert got == {"points": 12, "ranges": 1, "counts": 3,
+                   "predecessors": 2, "successors": 1, "searches": 4}
+    # the one-shard facade exposes the same counters
+    one = IndexService(keys, error=32)
+    one.range(0.0, 1.0)
+    assert one.service_stats()["query_counts"]["ranges"] == 1
+
+
+# --------------------------------------------------------- planner plumbing
+def test_fitspec_range_fraction_round_trip_and_validation():
+    spec = FitSpec(latency_budget_ns=700.0, range_fraction=0.3,
+                   range_scan_rows=128)
+    assert FitSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="range_fraction"):
+        FitSpec(error=64, range_fraction=1.5)
+    with pytest.raises(ValueError, match="range_scan_rows"):
+        FitSpec(error=64, range_scan_rows=0)
+
+
+def test_scan_heavy_plan_budgets_for_the_scan_term():
+    keys = np.sort(np.random.default_rng(22).choice(
+        2 ** 20, size=20_000, replace=False).astype(np.float64))
+    point_plan = plan(keys, FitSpec(latency_budget_ns=600.0))
+    scan_plan = plan(keys, FitSpec(latency_budget_ns=600.0,
+                                   range_fraction=0.5, range_scan_rows=512))
+    # the scan term eats budget the locate side must give back: same budget
+    # resolves to a tighter (faster-locate) error, never a looser one
+    assert scan_plan.error <= point_plan.error
+    assert "range_fraction" in scan_plan.explain()
+    # an impossible scan-dominated budget names the scan term
+    with pytest.raises(InfeasibleSpecError, match="range-scan term"):
+        plan(keys, FitSpec(latency_budget_ns=60.0, range_fraction=0.9,
+                           range_scan_rows=4096))
+    # range_fraction survives open_index's plan -> service round trip
+    svc = open_index(keys, FitSpec(error=64, range_fraction=0.25))
+    assert svc.plan.spec.range_fraction == 0.25
