@@ -1,0 +1,246 @@
+"""Async serving pipeline: open-loop arrival benchmark, coalescing on vs off.
+
+Measures the claim ``repro.index.pipeline`` makes: many small concurrent
+callers sustain far higher throughput when their point lookups are coalesced
+into one fast-tier fused batch than when each caller pays its own service
+call (Sec. 6: per-query cost collapses once the batch crosses the dispatch
+threshold).
+
+Method: an **open-loop** generator pre-schedules exponential inter-arrivals
+at a fixed rate (so the load never slows down when the server falls behind),
+then drives the same ``IndexService`` two ways --
+
+* coalescing **off**: a worker pool, every request is its own
+  ``svc.lookup`` call (direct per-caller dispatch);
+* coalescing **on**: one submitter feeds ``AsyncIndexService.lookup_async``
+  and the pipeline's flusher fuses queued requests into threshold/deadline
+  batches.
+
+Latency is ``completion - scheduled arrival`` (queueing delay included), so
+a saturated server shows its backlog honestly.  Arrival rates are expressed
+as multiples of the *measured* direct per-call capacity of this machine,
+which makes the saturation structure machine-independent: at the top rate
+the direct path is over capacity by construction while the coalescing path
+rides the fused-batch cost curve.
+
+Every driven result is compared bit-for-bit against the single-thread
+oracle (``svc.lookup`` over all queries at once), and a second section
+measures the first-flush latency spike with and without
+``prewarm`` (eager tier-engine build + compile at the flush bucket).
+
+Results land in ``out/bench_serving.json`` plus the usual ``emit`` lines.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+import numpy as np
+
+from repro.core.datasets import weblogs_like
+from repro.serve import AsyncIndexService, IndexService
+
+from .common import emit, write_json
+
+N = 200_000
+ERROR = 64
+N_REQUESTS = 6_000
+RATE_FACTORS = (0.25, 1.0, 4.0)          # x measured direct per-call capacity
+MAX_WAIT_US_SWEEP = (100.0, 500.0, 2000.0)
+OFF_WORKERS = 8
+FLUSH_THRESHOLD = 256
+PREWARM_FLUSH = 512
+CALIBRATION_CALLS = 512
+
+
+def _percentiles(lat_s: np.ndarray) -> dict:
+    lat_us = np.asarray(lat_s, np.float64) * 1e6
+    return {"p50_us": float(np.percentile(lat_us, 50)),
+            "p99_us": float(np.percentile(lat_us, 99))}
+
+
+def _schedule(rng: np.random.Generator, rate: float, n: int) -> np.ndarray:
+    """Open-loop arrival offsets: exponential inter-arrivals at ``rate``/s,
+    fixed before the run starts so backlog never throttles the generator."""
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def _drive_direct(svc, queries, sched, n_workers: int):
+    """Coalescing OFF: every request is its own synchronous service call."""
+    n = len(queries)
+    counter = itertools.count()
+    finish = np.zeros(n)
+    results: list = [None] * n
+    t0 = time.perf_counter()
+
+    def worker():
+        while True:
+            i = next(counter)
+            if i >= n:
+                return
+            delay = t0 + sched[i] - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            results[i] = svc.lookup(queries[i])
+            finish[i] = time.perf_counter()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    latency = finish - (t0 + sched)
+    return n / (finish.max() - t0), latency, results
+
+
+def _drive_pipeline(pipe, queries, sched):
+    """Coalescing ON: open-loop submitter; completions land via callbacks."""
+    n = len(queries)
+    finish = np.zeros(n)
+    results: list = [None] * n
+    futs = [None] * n
+
+    def _done(fut, i):
+        # runs on the flusher thread right after the scatter
+        finish[i] = time.perf_counter()
+        results[i] = fut.result()
+
+    t0 = time.perf_counter()
+    for i in range(n):
+        delay = t0 + sched[i] - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        fut = pipe.lookup_async(queries[i])
+        futs[i] = fut
+        fut.add_done_callback(lambda f, i=i: _done(f, i))
+    for fut in futs:
+        fut.result(30.0)
+    latency = finish - (t0 + sched)
+    return n / (finish.max() - t0), latency, results
+
+
+def _check_oracle(results, oracle: np.ndarray) -> bool:
+    got = np.concatenate([np.atleast_1d(r) for r in results])
+    return bool(np.array_equal(got, oracle))
+
+
+def _first_flush_ms(keys: np.ndarray, error: int, flush: int, *,
+                    prewarm: bool) -> float:
+    """Wall ms until the first coalesced flush resolves, on the dispatch
+    backend (whose large tier lazily builds + jit-compiles on first use)."""
+    svc = IndexService(keys, error, backend="dispatch", assume_sorted=True,
+                       engine_opts={"dispatch": {"small_max": 64,
+                                                 "large_min": flush}})
+    chunk = max(1, flush // 8)
+    chunks = [keys[i:i + chunk] for i in range(0, flush, chunk)]
+    # generous deadline: the first flush must be the *threshold* flush at the
+    # prewarmed bucket, not a partial deadline flush at some other shape
+    with AsyncIndexService(svc, flush_threshold=flush, max_wait_us=50_000.0,
+                           prewarm=prewarm) as pipe:
+        t0 = time.perf_counter()
+        futs = [pipe.lookup_async(c) for c in chunks]
+        for f in futs:
+            f.result(60.0)
+        return (time.perf_counter() - t0) * 1e3
+
+
+def run(n: int = N, error: int = ERROR, n_requests: int = N_REQUESTS,
+        rate_factors: tuple[float, ...] = RATE_FACTORS,
+        max_wait_us_sweep: tuple[float, ...] = MAX_WAIT_US_SWEEP,
+        off_workers: int = OFF_WORKERS,
+        flush_threshold: int = FLUSH_THRESHOLD,
+        prewarm_flush: int = PREWARM_FLUSH,
+        backend: str = "numpy"):
+    rng = np.random.default_rng(7)
+    keys = weblogs_like(n)
+    svc = IndexService(keys, error, backend=backend, assume_sorted=True)
+    qpool = keys[rng.integers(0, n, size=n_requests)]
+    queries = [qpool[i:i + 1] for i in range(n_requests)]
+    oracle = svc.lookup(qpool)          # the single-thread fused ground truth
+
+    # --- calibrate the direct path so arrival rates saturate by construction
+    for q in queries[:64]:
+        svc.lookup(q)
+    t0 = time.perf_counter()
+    for q in queries[:CALIBRATION_CALLS]:
+        svc.lookup(q)
+    per_call = (time.perf_counter() - t0) / min(CALIBRATION_CALLS, n_requests)
+    capacity = 1.0 / per_call
+    emit("serving", "direct_us_per_call", per_call * 1e6, f"backend={backend}")
+
+    # --- the sweep: arrival rate x {off, on(max_wait_us...)} ----------------
+    sweep = []
+    headline = None
+    for factor in sorted(rate_factors):
+        rate = factor * capacity
+        sched = _schedule(rng, rate, n_requests)
+
+        qps_off, lat_off, res_off = _drive_direct(svc, queries, sched,
+                                                  off_workers)
+        assert _check_oracle(res_off, oracle), "direct drive diverged"
+        off_row = {"rate_factor": factor, "arrival_qps": rate,
+                   "mode": "direct", "qps": qps_off, "oracle_exact": True,
+                   **_percentiles(lat_off)}
+        sweep.append(off_row)
+        emit("serving", f"qps_off_{factor:g}x", qps_off,
+             f"p99_us={off_row['p99_us']:.0f}")
+
+        best_on = None
+        for wait in max_wait_us_sweep:
+            with AsyncIndexService(svc, flush_threshold=flush_threshold,
+                                   max_wait_us=wait, prewarm=False) as pipe:
+                qps_on, lat_on, res_on = _drive_pipeline(pipe, queries, sched)
+                stats = pipe.pipeline_stats()
+            assert _check_oracle(res_on, oracle), "coalesced drive diverged"
+            row = {"rate_factor": factor, "arrival_qps": rate,
+                   "mode": "coalesce", "max_wait_us": wait, "qps": qps_on,
+                   "oracle_exact": True, **_percentiles(lat_on),
+                   "flushes": stats["flushes"],
+                   "threshold_flushes": stats["threshold_flushes"],
+                   "deadline_flushes": stats["deadline_flushes"],
+                   "max_fused_batch": stats["max_fused_batch"]}
+            sweep.append(row)
+            emit("serving", f"qps_on_{factor:g}x_wait{wait:g}us", qps_on,
+                 f"p99_us={row['p99_us']:.0f}")
+            if best_on is None or qps_on > best_on["qps"]:
+                best_on = row
+        headline = {"top_rate_factor": factor, "top_arrival_qps": rate,
+                    "qps_off": qps_off, "qps_on_best": best_on["qps"],
+                    "best_max_wait_us": best_on["max_wait_us"],
+                    "speedup": best_on["qps"] / qps_off,
+                    "p99_us_off": off_row["p99_us"],
+                    "p99_us_on_best": best_on["p99_us"]}
+
+    # the tentpole claim, enforced every run: at the top (over-capacity)
+    # arrival rate the coalescing front door sustains strictly more qps
+    assert headline["qps_on_best"] > headline["qps_off"], headline
+    emit("serving", "top_rate_speedup", headline["speedup"],
+         f"{headline['qps_on_best']:.0f} vs {headline['qps_off']:.0f} qps")
+
+    # --- first-flush latency: prewarm kills the lazy-compile spike ----------
+    cold_ms = _first_flush_ms(keys, error, prewarm_flush, prewarm=False)
+    warm_ms = _first_flush_ms(keys, error, prewarm_flush, prewarm=True)
+    assert warm_ms < cold_ms, (warm_ms, cold_ms)   # compile >> one warm flush
+    emit("serving", "first_flush_cold_ms", cold_ms)
+    emit("serving", "first_flush_prewarmed_ms", warm_ms)
+
+    results = {
+        "config": {"n": n, "error": error, "n_requests": n_requests,
+                   "backend": backend, "off_workers": off_workers,
+                   "flush_threshold": flush_threshold,
+                   "prewarm_flush": prewarm_flush,
+                   "rate_factors": list(rate_factors),
+                   "max_wait_us_sweep": list(max_wait_us_sweep)},
+        "calibration": {"direct_us_per_call": per_call * 1e6,
+                        "direct_capacity_qps": capacity},
+        "sweep": sweep,
+        "headline": headline,
+        "first_flush": {"cold_ms": cold_ms, "prewarmed_ms": warm_ms},
+    }
+    write_json("bench_serving", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

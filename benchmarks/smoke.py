@@ -16,7 +16,7 @@ import platform
 import time
 
 from . import (bench_insert, bench_lookup, bench_plan, bench_range,
-               bench_rebalance, bench_sharded)
+               bench_rebalance, bench_serving, bench_sharded)
 from .common import write_json
 
 TINY = {
@@ -43,6 +43,14 @@ TINY = {
     "range": (bench_range.run,
               dict(n=20_000, selectivities=(1e-3, 1e-2, 1e-1),
                    scans_per_selectivity=10, head_to_head_rows=512)),
+    # async front door: open-loop arrivals at 0.5x/3x the machine's measured
+    # direct per-call capacity; asserts coalescing-on sustains more qps than
+    # direct dispatch at the over-capacity rate, and that prewarm beats the
+    # cold first flush
+    "serving": (bench_serving.run,
+                dict(n=20_000, n_requests=1_200, rate_factors=(0.5, 3.0),
+                     max_wait_us_sweep=(100.0, 1000.0), flush_threshold=128,
+                     prewarm_flush=256)),
 }
 
 

@@ -25,6 +25,9 @@ Module map (see ROADMAP.md):
                  per-shard epoch streams; ``pack_shard_tables`` device bridge
   fit.py      -- ``FitSpec`` -> ``plan()`` -> ``IndexPlan`` -> ``open_index``:
                  the Sec. 6 cost model resolving SLOs into every knob above
+  pipeline.py -- ``AsyncIndexService``/``open_pipeline``: the coalescing
+                 async front door (concurrent callers fuse into one
+                 fast-tier batch) + the background publish/rebalance cadence
 
 ``table`` and ``query`` are imported eagerly (pure numpy); the
 engine/snapshot/sharded/fit names are resolved lazily (PEP 562) so host-only
@@ -48,13 +51,15 @@ _SHARDED_NAMES = {"PackedShardTables", "ShardSet", "ShardStats",
                   "ShardedIndexService", "pack_shard_tables"}
 _FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
               "open_index", "plan"}
+_PIPELINE_NAMES = {"AsyncIndexService", "PipelineClosed",
+                   "PipelineOverloaded", "open_pipeline"}
 
 __all__ = [
     "PointResult", "QueryVerbs", "RangeResult", "SegmentTable",
     "build_shard_tables", "numpy_lookup", "numpy_search", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
-    *sorted(_FIT_NAMES),
+    *sorted(_FIT_NAMES), *sorted(_PIPELINE_NAMES),
 ]
 
 
@@ -71,4 +76,7 @@ def __getattr__(name):
     if name in _FIT_NAMES:
         from . import fit
         return getattr(fit, name)
+    if name in _PIPELINE_NAMES:
+        from . import pipeline
+        return getattr(pipeline, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

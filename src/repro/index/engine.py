@@ -380,6 +380,13 @@ def make_engine(table: SegmentTable, backend: str = "numpy", **opts) -> LookupEn
     return cls(table, **opts)
 
 
+def _prewarm_queries(table: SegmentTable, size: int) -> np.ndarray:
+    """A representative warm-up batch: real keys cycled to ``size`` (real
+    keys exercise the same routing/window paths production queries will)."""
+    sample = np.asarray(table.keys[: min(table.n_keys, size)], np.float64)
+    return np.resize(sample, size)
+
+
 @register_backend("numpy")
 class NumpyEngine(QueryVerbs):
     def __init__(self, table: SegmentTable):
@@ -391,6 +398,9 @@ class NumpyEngine(QueryVerbs):
 
     def search(self, queries, side: str = "left") -> np.ndarray:
         return numpy_search(self.table, queries, side)
+
+    def prewarm(self, batch_sizes=None) -> None:
+        """No-op: the host path has nothing to compile."""
 
 
 class _DeviceEngine(QueryVerbs):
@@ -427,6 +437,18 @@ class _DeviceEngine(QueryVerbs):
                     self._search_fns[side] = fn
         out = np.asarray(fn(jnp.asarray(queries, jnp.float32)))
         return out.astype(np.int64)
+
+    def prewarm(self, batch_sizes=None) -> None:
+        """Trace + compile the lookup and both search sides now, at the
+        given batch sizes (jit caches are shape-specialized: a compile only
+        helps batches of the same size).  Default one representative size."""
+        if self.table.n_keys == 0:
+            return
+        for size in batch_sizes or (256,):
+            q = _prewarm_queries(self.table, int(size))
+            self.lookup(q)
+            self.search(q, "left")
+            self.search(q, "right")
 
 
 @register_backend("xla-window")
@@ -543,3 +565,25 @@ class DispatchEngine(QueryVerbs):
         ``lookup`` (every tier returns identical insertion ranks for exact-f32
         workloads, so dispatch stays semantics-preserving)."""
         return self.engine_for(int(np.size(queries))).search(queries, side)
+
+    def prewarm(self, batch_sizes=None) -> None:
+        """Opt-in eager tier construction + compilation.
+
+        Tier engines are normally built lazily on first use, which makes the
+        first large batch after a snapshot swap eat the Pallas/XLA
+        plan-and-compile latency as a p99 spike.  ``prewarm`` pays that cost
+        up front: for each batch size (default: one representative size per
+        tier) the owning tier engine is built and its lookup/search paths
+        compiled at exactly that shape.  Called by the async pipeline on
+        start with its flush-bucket sizes."""
+        if batch_sizes is None:
+            batch_sizes = [self.large_min]
+            if self.small_max >= 1:
+                batch_sizes.append(self.small_max)
+            if self.small_max + 1 < self.large_min:
+                batch_sizes.append(self.small_max + 1)
+        for size in batch_sizes:
+            eng = self.engine_for(int(size))
+            warm = getattr(eng, "prewarm", None)
+            if warm is not None:
+                warm(batch_sizes=(int(size),))

@@ -280,6 +280,14 @@ class IndexPlan:
     small_max: int | None = None
     large_min: int | None = None
     publish_every: int | None = None
+    # async-pipeline knobs (repro.index.pipeline.AsyncIndexService): fuse
+    # queued queries once flush_threshold of them are waiting (the planner
+    # sets it to the large-tier dispatch crossing, so fused batches ride the
+    # fast tier), flush a partial batch after max_wait_us, and bound the
+    # request queue at queue_depth queries.  None = derive at pipeline build.
+    flush_threshold: int | None = None
+    max_wait_us: float | None = None
+    queue_depth: int | None = None
     # provenance / audit trail
     objective: str = "raw"           # latency | space | error | raw
     budget: float | None = None
@@ -296,6 +304,16 @@ class IndexPlan:
         if (self.small_max is None) != (self.large_min is None):
             raise ValueError("small_max and large_min must be set together "
                              "(or both None to defer to the cost model)")
+        if self.flush_threshold is not None and self.flush_threshold < 1:
+            raise ValueError(f"flush_threshold must be >= 1, got "
+                             f"{self.flush_threshold}")
+        if self.max_wait_us is not None and self.max_wait_us <= 0:
+            raise ValueError(f"max_wait_us must be > 0, got "
+                             f"{self.max_wait_us}")
+        if self.queue_depth is not None and self.flush_threshold is not None \
+                and self.queue_depth < self.flush_threshold:
+            raise ValueError(f"queue_depth ({self.queue_depth}) must be >= "
+                             f"flush_threshold ({self.flush_threshold})")
 
     @classmethod
     def from_knobs(cls, error: int, *, n_shards: int = 1, buffer_size: int = 0,
@@ -340,6 +358,12 @@ class IndexPlan:
                 f"  dispatch tiers (cost-model crossings): host <= "
                 f"{self.small_max} < device-bisect < {self.large_min} <= "
                 f"pallas")
+        if self.flush_threshold is not None:
+            lines.append(
+                f"  async pipeline: coalesce {self.flush_threshold} queued "
+                f"queries into one fused batch (or flush after "
+                f"{self.max_wait_us:g} us), queue bounded at "
+                f"{self.queue_depth} queries")
         if self.spec is not None and self.spec.range_fraction > 0:
             lines.append(
                 f"  scan-heavy workload: range_fraction="
@@ -554,6 +578,13 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
     publish_every = None
     if spec.insert_rate > 0 and buffer_size > 0:
         publish_every = int(min(max(spec.insert_rate, 64), 65_536))
+    # async-pipeline knobs: fuse once a flush earns the large (fused) tier,
+    # bound the wait for a partial batch, and give the queue a few flushes of
+    # headroom (see repro.index.pipeline for the serving semantics)
+    from .pipeline import DEFAULT_MAX_WAIT_US, DEFAULT_QUEUE_DEPTH_FLUSHES
+    flush_threshold = int(large_min)
+    max_wait_us = DEFAULT_MAX_WAIT_US
+    queue_depth = DEFAULT_QUEUE_DEPTH_FLUSHES * flush_threshold
 
     candidates = tuple(
         PlanCandidate(error=e, n_segments=s, latency_ns=lats[e],
@@ -563,7 +594,10 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
     return IndexPlan(error=chosen, n_shards=n_shards,
                      buffer_size=buffer_size, backend=backend,
                      small_max=small_max, large_min=large_min,
-                     publish_every=publish_every, objective=spec.objective,
+                     publish_every=publish_every,
+                     flush_threshold=flush_threshold,
+                     max_wait_us=max_wait_us, queue_depth=queue_depth,
+                     objective=spec.objective,
                      budget=budget, hardware=spec.hardware,
                      n_keys=int(arr.shape[0]), candidates=candidates,
                      spec=spec)

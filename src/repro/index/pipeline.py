@@ -1,0 +1,516 @@
+"""Async serving pipeline: request coalescing into the fast tier + a
+background publish/rebalance cadence.
+
+The Sec. 6 cost model (and ``BENCH_smoke``'s measured tier curves) say the
+same thing: per-query cost collapses when lookups ride the large-batch tier
+-- the fixed cost of a call (python dispatch, device launch, kernel plan)
+amortizes over the batch, and the fused compare-reduce path has an
+order-of-magnitude lower marginal cost than the scalar host path.  Yet every
+caller of ``IndexService.lookup`` pays the tier *their own* batch size earns:
+a thousand concurrent callers probing one key each run a thousand scalar
+lookups instead of one fused batch of a thousand.
+
+:class:`AsyncIndexService` closes that gap.  It is a front door over any
+index service (``IndexService`` / ``ShardedIndexService``) that
+
+* **coalesces**: concurrent callers submit point/search queries into a
+  bounded queue (:meth:`lookup_async` / :meth:`search_async`, each returning
+  a ``concurrent.futures.Future``); a flusher thread fuses everything queued
+  into ONE batch the moment the planned dispatch threshold is reached
+  (``flush_threshold``, by default the plan's ``large_min`` -- the batch size
+  where the modeled Pallas-tier latency curve wins) or a deadline expires
+  (``max_wait_us``, so a trickle of traffic is never parked forever), then
+  scatters per-caller slices back through the futures.  Heavy traffic from
+  many small callers therefore lands on the fused large-batch tier
+  *naturally*, with per-caller latency bounded by the deadline;
+* **maintains**: a daemon cadence thread takes ``publish()`` (a no-op when
+  clean) and the ``auto_rebalance`` skew check off the request path, honoring
+  the plan's publish cadence (``IndexPlan.publish_every`` -- resolved against
+  the spec's expected insert rate into a time interval) instead of running
+  re-segmentation inline on whichever unlucky caller's insert trips the
+  counter;
+* **prewarms**: on start (opt-out via ``prewarm=False``) every dispatch tier
+  engine is built and compiled eagerly (:meth:`DispatchEngine.prewarm`), so
+  the first coalesced batch does not eat the Pallas plan/compile latency as
+  a p99 spike.
+
+Consistency: a fused flush is one ordinary batched call on the underlying
+service, so every answer is bit-identical to the caller running the same
+batch alone -- coalescing changes *when* work runs, never what it returns.
+
+Failure semantics are loud: an exception inside a fused call fails exactly
+the futures of that batch; a crash of the flusher or cadence thread is
+recorded and re-raised to every subsequent submitter and to :meth:`close`
+(a silently dead maintenance loop is an unbounded staleness bug).
+
+Lifecycle::
+
+    pipe = open_pipeline(keys, FitSpec(latency_budget_ns=500.0))
+    f = pipe.lookup_async(qs)          # Future; batch-submit is the same call
+    pipe.lookup(qs)                    # sync facade: submit + .result()
+    pipe.close()                       # drain in-flight futures, stop threads
+
+or as a context manager (``with open_pipeline(...) as pipe:``).  ``close``
+is idempotent; submissions after close raise :class:`PipelineClosed`.
+
+Backpressure: the queue is bounded (``queue_depth`` queries).  A submit
+that would overflow it blocks until a flush makes room, up to ``timeout``
+(then :class:`PipelineOverloaded`) -- an unbounded queue would just move the
+overload into memory and tail latency.  A single submission of
+``flush_threshold`` or more queries bypasses the queue entirely and runs
+fused inline on the caller's thread: it already earns the fast tier alone,
+and parking it would only add deadline latency for no batching win.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+if TYPE_CHECKING:   # the service types are duck-typed at runtime
+    from .fit import FitSpec, IndexPlan
+
+# Fallbacks when neither the caller nor the plan pins a knob.
+DEFAULT_FLUSH_THRESHOLD = 1024     # ~ a modeled large_min for mid-size tables
+DEFAULT_MAX_WAIT_US = 200.0        # trickle traffic flushes 5000x/s
+DEFAULT_QUEUE_DEPTH_FLUSHES = 8    # queue_depth = 8 flushes of headroom
+
+
+class PipelineClosed(RuntimeError):
+    """The pipeline is closed (or its maintenance loop died); see cause."""
+
+
+class PipelineOverloaded(RuntimeError):
+    """The bounded request queue stayed full past the submit timeout."""
+
+
+class _Request:
+    """One caller's queued submission: queries + the future to resolve."""
+    __slots__ = ("queries", "shape", "future")
+
+    def __init__(self, queries: np.ndarray, shape: tuple[int, ...],
+                 future: Future):
+        self.queries = queries
+        self.shape = shape
+        self.future = future
+
+
+class AsyncIndexService:
+    """Coalescing async front door + maintenance cadence over an index service.
+
+    ``service`` is an ``IndexService`` or ``ShardedIndexService`` (anything
+    with ``lookup(queries, backend)`` / ``search(queries, side, backend)`` /
+    ``publish()`` and a ``plan``).  Knobs default from ``service.plan``:
+
+    * ``flush_threshold`` -- fuse and dispatch once this many queries are
+      queued; default ``plan.flush_threshold`` (the planner sets it to the
+      plan's ``large_min`` dispatch crossing), else ``plan.large_min``, else
+      :data:`DEFAULT_FLUSH_THRESHOLD`.
+    * ``max_wait_us`` -- oldest-request deadline in microseconds; a partial
+      batch flushes when it expires.  Default ``plan.max_wait_us`` else
+      :data:`DEFAULT_MAX_WAIT_US`.
+    * ``queue_depth`` -- bound on queued queries across callers; submits
+      block (then raise :class:`PipelineOverloaded`) when it is full.
+      Default ``plan.queue_depth`` else ``8 x flush_threshold``.
+    * ``publish_interval_s`` -- cadence-thread period.  Default: the plan's
+      ``publish_every`` (an insert count) divided by the spec's expected
+      ``insert_rate`` (inserts/s), i.e. the time the planner expects that
+      many inserts to take; ``None`` when the plan has no cadence (read-only
+      plan) -- the cadence thread then only runs if a period is passed
+      explicitly.
+    * ``prewarm`` -- build + compile every serving engine (and every
+      dispatch tier) before accepting traffic, so the first fused flush does
+      not pay plan/compile latency.
+
+    Threads start in the constructor; ``close()`` (or the context manager)
+    drains queued requests, completes their futures, and joins the threads.
+    """
+
+    def __init__(self, service, *, flush_threshold: int | None = None,
+                 max_wait_us: float | None = None,
+                 queue_depth: int | None = None,
+                 publish_interval_s: float | None = None,
+                 backend: str | None = None,
+                 pad_batches: bool = True,
+                 prewarm: bool = True):
+        plan = getattr(service, "plan", None)
+        if flush_threshold is None:
+            flush_threshold = getattr(plan, "flush_threshold", None)
+        if flush_threshold is None:
+            flush_threshold = getattr(plan, "large_min", None)
+        if flush_threshold is None:
+            flush_threshold = DEFAULT_FLUSH_THRESHOLD
+        if max_wait_us is None:
+            max_wait_us = getattr(plan, "max_wait_us", None)
+        if max_wait_us is None:
+            max_wait_us = DEFAULT_MAX_WAIT_US
+        if queue_depth is None:
+            queue_depth = getattr(plan, "queue_depth", None)
+        if queue_depth is None:
+            queue_depth = DEFAULT_QUEUE_DEPTH_FLUSHES * int(flush_threshold)
+        if publish_interval_s is None:
+            publish_interval_s = _plan_publish_interval(plan)
+        if flush_threshold < 1:
+            raise ValueError(f"flush_threshold must be >= 1, got "
+                             f"{flush_threshold!r}")
+        if max_wait_us <= 0:
+            raise ValueError(f"max_wait_us must be > 0, got {max_wait_us!r}")
+        if queue_depth < flush_threshold:
+            raise ValueError(f"queue_depth ({queue_depth}) must be >= "
+                             f"flush_threshold ({flush_threshold}); a queue "
+                             "that can never hold a full batch flushes only "
+                             "on the deadline")
+        if publish_interval_s is not None and publish_interval_s <= 0:
+            raise ValueError(f"publish_interval_s must be > 0 (or None for "
+                             f"no cadence), got {publish_interval_s!r}")
+
+        self.service = service
+        self.flush_threshold = int(flush_threshold)
+        self.max_wait_us = float(max_wait_us)
+        self.queue_depth = int(queue_depth)
+        self.publish_interval_s = publish_interval_s
+        self.backend = backend
+        self.pad_batches = bool(pad_batches)
+
+        # queue state: per-verb buckets so each flush fuses like with like
+        # ("lookup" and each ("search", side) fuse separately -- a fused call
+        # must be one service call).  All mutations under _lock; _space wakes
+        # blocked submitters, _work wakes the flusher.
+        self._lock = threading.Lock()
+        self._space = threading.Condition(self._lock)
+        self._work = threading.Condition(self._lock)
+        self._buckets: dict[tuple, list[_Request]] = {}
+        self._queued = 0                 # total queries across buckets
+        self._oldest: float | None = None  # monotonic enqueue time of oldest
+        self._closed = False
+        self._fatal: BaseException | None = None
+
+        # stats (under _lock)
+        self._stats = {"flushes": 0, "threshold_flushes": 0,
+                       "deadline_flushes": 0, "drain_flushes": 0,
+                       "inline_batches": 0, "coalesced_queries": 0,
+                       "max_fused_batch": 0, "publishes": 0,
+                       "maintenance_ticks": 0}
+
+        if prewarm:
+            self.prewarm()
+
+        self._stop_event = threading.Event()
+        self._flusher = threading.Thread(target=self._flush_loop,
+                                         name="index-pipeline-flush",
+                                         daemon=True)
+        self._flusher.start()
+        self._maintenance = None
+        if self.publish_interval_s is not None:
+            self._maintenance = threading.Thread(
+                target=self._maintenance_loop,
+                name="index-pipeline-maintenance", daemon=True)
+            self._maintenance.start()
+
+    # ------------------------------------------------------------------ submit
+    def lookup_async(self, queries, timeout: float | None = None) -> Future:
+        """Queue a point-lookup batch; the Future resolves to the same ranks
+        ``service.lookup(queries)`` would return (global ranks, -1 absent)."""
+        return self._submit(("lookup",), queries, timeout)
+
+    def search_async(self, queries, side: str = "left",
+                     timeout: float | None = None) -> Future:
+        """Queue an insertion-rank search (the query plane's primitive);
+        resolves to ``service.search(queries, side)``."""
+        if side not in ("left", "right"):
+            raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+        return self._submit(("search", side), queries, timeout)
+
+    def lookup(self, queries, timeout: float | None = None) -> np.ndarray:
+        """Sync facade: submit and wait (``lookup_async(...).result()``)."""
+        return self.lookup_async(queries, timeout).result(timeout)
+
+    def search(self, queries, side: str = "left",
+               timeout: float | None = None) -> np.ndarray:
+        """Sync facade over :meth:`search_async`."""
+        return self.search_async(queries, side, timeout).result(timeout)
+
+    def _submit(self, kind: tuple, queries, timeout: float | None) -> Future:
+        q = np.asarray(queries, np.float64)
+        shape = q.shape
+        q = np.atleast_1d(q).ravel()
+        fut: Future = Future()
+        if q.size == 0:
+            fut.set_result(np.empty(shape, np.int64))
+            return fut
+        if q.size >= self.flush_threshold:
+            # already a fast-tier batch on its own: run fused inline rather
+            # than occupying the whole queue and delaying everyone else
+            self._check_open()
+            with self._lock:
+                self._stats["inline_batches"] += 1
+            try:
+                fut.set_result(self._run(kind, q).reshape(shape))
+            except BaseException as exc:  # surfaced via the future
+                fut.set_exception(exc)
+            return fut
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            self._raise_if_dead_locked()
+            while self._queued + q.size > self.queue_depth:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise PipelineOverloaded(
+                            f"request queue full ({self._queued}/"
+                            f"{self.queue_depth} queries) for {timeout:g}s; "
+                            "the flusher is not keeping up with arrivals -- "
+                            "raise queue_depth, lower max_wait_us, or shed "
+                            "load")
+                self._space.wait(remaining)
+                self._raise_if_dead_locked()
+            self._buckets.setdefault(kind, []).append(_Request(q, shape, fut))
+            self._queued += q.size
+            if self._oldest is None:
+                self._oldest = time.monotonic()
+                self._work.notify()   # arm the flusher's deadline timer
+            if self._queued >= self.flush_threshold:
+                self._work.notify()
+        return fut
+
+    # --------------------------------------------------------------- the flush
+    def _run(self, kind: tuple, fused: np.ndarray) -> np.ndarray:
+        """One fused service call.  ``pad_batches`` pads the fused batch to
+        its power-of-two bucket (repeating the first query; the tail is
+        sliced off) so the device backends see a *bounded set of shapes* --
+        without it every distinct flush size is a fresh jit compile and
+        prewarming could never cover the steady state."""
+        n = fused.shape[0]
+        if self.pad_batches:
+            m = _bucket_size(n)
+            if m > n:
+                fused = np.concatenate(
+                    [fused, np.full(m - n, fused[0], np.float64)])
+        if kind[0] == "lookup":
+            out = np.asarray(self.service.lookup(fused, self.backend),
+                             np.int64)
+        else:
+            out = np.asarray(self.service.search(fused, kind[1], self.backend),
+                             np.int64)
+        return out[:n]
+
+    def _take_batches(self) -> list[tuple[tuple, list[_Request]]]:
+        """Under _lock: claim everything queued and reset the queue."""
+        batches = [(k, reqs) for k, reqs in self._buckets.items() if reqs]
+        self._buckets = {}
+        self._queued = 0
+        self._oldest = None
+        if batches:
+            self._space.notify_all()
+        return batches
+
+    def _flush(self, batches: list[tuple[tuple, list[_Request]]]) -> None:
+        """Fuse each verb bucket into one service call; scatter per-caller
+        slices back through the futures.  An exception fails exactly the
+        futures of the batch that raised it."""
+        for kind, reqs in batches:
+            fused = (reqs[0].queries if len(reqs) == 1
+                     else np.concatenate([r.queries for r in reqs]))
+            with self._lock:
+                self._stats["flushes"] += 1
+                self._stats["coalesced_queries"] += int(fused.size)
+                self._stats["max_fused_batch"] = max(
+                    self._stats["max_fused_batch"], int(fused.size))
+            try:
+                out = self._run(kind, fused)
+            except BaseException as exc:
+                for r in reqs:
+                    r.future.set_exception(exc)
+                continue
+            off = 0
+            for r in reqs:
+                n = r.queries.size
+                r.future.set_result(out[off:off + n].reshape(r.shape))
+                off += n
+
+    def _flush_loop(self) -> None:
+        try:
+            while True:
+                with self._lock:
+                    while True:
+                        if self._closed:
+                            break
+                        now = time.monotonic()
+                        if self._queued >= self.flush_threshold:
+                            self._stats["threshold_flushes"] += 1
+                            break
+                        if self._oldest is not None:
+                            expires = self._oldest + self.max_wait_us * 1e-6
+                            if now >= expires:
+                                self._stats["deadline_flushes"] += 1
+                                break
+                            self._work.wait(expires - now)
+                        else:
+                            self._work.wait()
+                    if self._closed:
+                        return          # close() drains under its own lock
+                    batches = self._take_batches()
+                self._flush(batches)
+        except BaseException as exc:     # pragma: no cover - defensive
+            self._record_fatal(exc)
+
+    # ------------------------------------------------------------- maintenance
+    def _maintenance_loop(self) -> None:
+        """Periodic publish (no-op when clean) + the service's auto_rebalance
+        check, off the request path.  A crash is fatal to the pipeline and
+        re-raised to subsequent submitters and close()."""
+        assert self.publish_interval_s is not None
+        stop = self._stop_event
+        last_epoch = getattr(self.service, "epoch", None)
+        try:
+            while not stop.wait(self.publish_interval_s):
+                result = self.service.publish()
+                if isinstance(result, dict):     # sharded: {sid: Snapshot}
+                    did_publish = bool(result)
+                else:                            # IndexService: a Snapshot,
+                    did_publish = result.epoch != last_epoch  # same on no-op
+                    last_epoch = result.epoch
+                with self._lock:
+                    self._stats["maintenance_ticks"] += 1
+                    if did_publish:
+                        self._stats["publishes"] += 1
+        except BaseException as exc:
+            self._record_fatal(exc)
+
+    def _record_fatal(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._fatal is None:
+                self._fatal = exc
+            self._closed = True
+            batches = self._take_batches()
+            self._space.notify_all()
+            self._work.notify_all()
+        for _, reqs in batches:
+            for r in reqs:
+                r.future.set_exception(exc)
+
+    # --------------------------------------------------------------- lifecycle
+    def prewarm(self, backend: str | None = None) -> None:
+        """Build and compile the serving engines before taking traffic (see
+        ``ShardedIndexService.prewarm`` / ``DispatchEngine.prewarm``): the
+        first coalesced flush then skips the jit/plan latency spike.
+        Compilation happens at the threshold's batch bucket -- the exact
+        shape a threshold flush dispatches (``pad_batches`` keeps the shape
+        set bounded, so this one compile covers the steady state)."""
+        sizes = (_bucket_size(self.flush_threshold),) if self.pad_batches \
+            else (self.flush_threshold,)
+        self.service.prewarm(backend or self.backend, batch_sizes=sizes)
+
+    def publish(self):
+        """Manual publish passthrough (the cadence thread's tick, on demand)."""
+        return self.service.publish()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def _check_open(self) -> None:
+        with self._lock:
+            self._raise_if_dead_locked()
+
+    def _raise_if_dead_locked(self) -> None:
+        if self._fatal is not None:
+            raise PipelineClosed("pipeline maintenance died; see the "
+                                 "cause") from self._fatal
+        if self._closed:
+            raise PipelineClosed("pipeline is closed")
+
+    def pipeline_stats(self) -> dict:
+        """Counters: flushes by trigger, fused batch sizes, publishes."""
+        with self._lock:
+            out = dict(self._stats)
+            out["queued"] = self._queued
+        out["flush_threshold"] = self.flush_threshold
+        out["max_wait_us"] = self.max_wait_us
+        out["queue_depth"] = self.queue_depth
+        return out
+
+    def close(self, timeout: float = 10.0) -> None:
+        """Drain queued requests (their futures complete), stop both threads,
+        and re-raise the first maintenance/flush crash if one happened.
+        Idempotent; safe to call from ``with``-exit after an error."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+            batches = self._take_batches()
+            self._work.notify_all()
+            self._space.notify_all()
+            if batches:
+                self._stats["drain_flushes"] += 1
+        if batches:
+            self._flush(batches)
+        self._stop_event.set()
+        if not already:
+            self._flusher.join(timeout)
+            if self._maintenance is not None:
+                self._maintenance.join(timeout)
+        if self._fatal is not None:
+            raise PipelineClosed("pipeline maintenance died; see the "
+                                 "cause") from self._fatal
+
+    def __enter__(self) -> "AsyncIndexService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # don't mask an in-flight exception with the close-time re-raise
+        try:
+            self.close()
+        except PipelineClosed:
+            if exc_type is None:
+                raise
+
+    # ----------------------------------------------------------- observability
+    def service_stats(self) -> dict:
+        """The wrapped service's stats plus the pipeline counters."""
+        out = self.service.service_stats()
+        out["pipeline"] = self.pipeline_stats()
+        return out
+
+
+def _bucket_size(n: int) -> int:
+    """The power-of-two batch bucket ``n`` pads into (floor 16, so tiny
+    deadline flushes share a handful of shapes instead of one each)."""
+    return max(16, 1 << (int(n) - 1).bit_length())
+
+
+def _plan_publish_interval(plan) -> float | None:
+    """Resolve a plan's count-based publish cadence into a time period using
+    the spec's expected insert rate: publish_every inserts at insert_rate
+    inserts/s take publish_every/insert_rate seconds.  None when the plan has
+    no cadence or no rate to resolve it against."""
+    if plan is None or getattr(plan, "publish_every", None) is None:
+        return None
+    spec = getattr(plan, "spec", None)
+    rate = getattr(spec, "insert_rate", 0.0) if spec is not None else 0.0
+    if rate and rate > 0:
+        return max(plan.publish_every / rate, 1e-3)
+    return 1.0     # cadence requested but no rate hint: 1s ticks are cheap
+
+
+def open_pipeline(keys, spec_or_plan: "FitSpec | IndexPlan", *,
+                  payload: np.ndarray | None = None,
+                  flush_threshold: int | None = None,
+                  max_wait_us: float | None = None,
+                  queue_depth: int | None = None,
+                  publish_interval_s: float | None = None,
+                  prewarm: bool = True,
+                  **service_kwargs) -> AsyncIndexService:
+    """SLO-driven construction of the whole serving pipeline: resolve the
+    spec (``fit.plan``), build the service (``fit.open_index``), and wrap it
+    in the coalescing front door with the plan's pipeline knobs.  Extra
+    ``service_kwargs`` pass through to the service constructor."""
+    from .fit import open_index
+    svc = open_index(keys, spec_or_plan, payload=payload, **service_kwargs)
+    return AsyncIndexService(svc, flush_threshold=flush_threshold,
+                             max_wait_us=max_wait_us, queue_depth=queue_depth,
+                             publish_interval_s=publish_interval_s,
+                             prewarm=prewarm)

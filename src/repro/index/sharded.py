@@ -50,6 +50,7 @@ any future multi-host serving tier consume.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import numpy as np
@@ -252,7 +253,11 @@ class ShardedIndexService:
         self._rebalance_skipped = 0
         self._last_rebalance: dict | None = None
         # per-shape query counters (queries for point-shaped verbs, scans for
-        # range, bound-pairs for count) -- see service_stats()
+        # range, bound-pairs for count) -- see service_stats().  Guarded by a
+        # lock: dict `+=` is a read-modify-write, and the async front door
+        # (repro.index.pipeline) drives these verbs from many threads --
+        # unlocked increments lose updates under that concurrency.
+        self._counts_lock = threading.Lock()
         self._query_counts = {"points": 0, "ranges": 0, "counts": 0,
                               "predecessors": 0, "successors": 0,
                               "searches": 0}
@@ -341,6 +346,8 @@ class ShardedIndexService:
         ``counts`` counts bound pairs, ``searches`` direct calls to the raw
         primitive -- for workload dashboards and for checking a deployed
         ``FitSpec.range_fraction`` against reality)."""
+        with self._counts_lock:
+            counts = dict(self._query_counts)
         return {"version": self._shard_set.version,
                 "n_shards": self.n_shards,
                 "imbalance": self.imbalance(),
@@ -348,7 +355,31 @@ class ShardedIndexService:
                 "rebalance_skipped": self._rebalance_skipped,
                 "last_rebalance": self._last_rebalance,
                 "pending_inserts": self.pending_inserts,
-                "query_counts": dict(self._query_counts)}
+                "query_counts": counts}
+
+    def _count(self, shape: str, n: int) -> None:
+        """Atomic query-counter bump (verbs run concurrently under the async
+        front door; an unlocked ``dict +=`` would lose updates)."""
+        with self._counts_lock:
+            self._query_counts[shape] += n
+
+    def prewarm(self, backend: str | None = None,
+                batch_sizes: Sequence[int] | None = None) -> None:
+        """Build (and, for device backends, compile) every shard's engine for
+        ``backend`` before serving traffic -- called by the async pipeline on
+        start so the first coalesced batch skips the lazy plan/compile spike.
+        ``batch_sizes`` are the batch shapes to compile at (jit caches are
+        shape-specialized); with several shards a fused batch splits by
+        routing, so the per-shard shapes are exact only for one shard --
+        prewarm then still pays the per-tier compile for the common shapes.
+        Engines without a ``prewarm`` (custom registered backends) are just
+        built."""
+        backend = backend or self.default_backend
+        for handle in self._shard_set.handles:
+            eng = handle.engine(backend)
+            warm = getattr(eng, "prewarm", None)
+            if warm is not None:
+                warm(batch_sizes=batch_sizes)
 
     # ------------------------------------------------------------- write path
     def insert(self, key: float, value=None) -> None:
@@ -523,7 +554,7 @@ class ShardedIndexService:
         per backend inside each handle, so pinning is an O(1) dict hit after
         the first call)."""
         backend = backend or self.default_backend
-        self._query_counts["points"] += int(np.size(queries))
+        self._count("points", int(np.size(queries)))
         ss = self._shard_set                        # pin the routing view
         if len(ss.handles) == 1:                    # the IndexService path
             return ss.handles[0].lookup(queries, backend)
@@ -576,7 +607,7 @@ class ShardedIndexService:
         """Global ``searchsorted(all_keys, queries, side)`` insertion ranks
         across the current shard snapshots (the query plane's primitive)."""
         check_side(side)
-        self._query_counts["searches"] += int(np.size(queries))
+        self._count("searches", int(np.size(queries)))
         return self._search_view(self._pin_view(backend), queries, side)
 
     def point(self, queries, backend: str | None = None) -> PointResult:
@@ -585,7 +616,7 @@ class ShardedIndexService:
         _, _, engines, offsets, _ = view
         ss = view[0]
         q = np.asarray(queries, np.float64)
-        self._query_counts["points"] += int(q.size)
+        self._count("points", int(q.size))
         sid = route_keys(ss.boundaries, q)
         rank = np.full(q.shape, -1, np.int64)
         found = np.zeros(q.shape, bool)
@@ -604,7 +635,7 @@ class ShardedIndexService:
         hi = np.asarray(hi, np.float64)
         counts = np.maximum(self._search_view(view, hi, "right")
                             - self._search_view(view, lo, "left"), 0)
-        self._query_counts["counts"] += int(counts.size)
+        self._count("counts", int(counts.size))
         return counts.astype(np.int64)
 
     def range(self, lo, hi, *, materialize: bool = True,
@@ -618,7 +649,7 @@ class ShardedIndexService:
         lo, hi = check_range(lo, hi)
         view = self._pin_view(backend)
         ss, snaps, engines, offsets, _ = view
-        self._query_counts["ranges"] += 1
+        self._count("ranges", 1)
         lo_rank = int(self._search_view(view, np.asarray([lo]), "left")[0])
         hi_rank = max(int(self._search_view(view, np.asarray([hi]),
                                             "right")[0]), lo_rank)
@@ -649,7 +680,7 @@ class ShardedIndexService:
         occurrence), found=False where every key is above the query."""
         view = self._pin_view(backend)
         q = np.asarray(queries, np.float64)
-        self._query_counts["predecessors"] += int(q.size)
+        self._count("predecessors", int(q.size))
         rank = self._search_view(view, q, "right") - 1
         found = rank >= 0
         return PointResult(rank=np.where(found, rank, -1), found=found)
@@ -659,7 +690,7 @@ class ShardedIndexService:
         occurrence), found=False where every key is below the query."""
         view = self._pin_view(backend)
         q = np.asarray(queries, np.float64)
-        self._query_counts["successors"] += int(q.size)
+        self._count("successors", int(q.size))
         rank = self._search_view(view, q, "left")
         found = rank < view[4]
         return PointResult(rank=np.where(found, rank, -1), found=found)

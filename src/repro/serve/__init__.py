@@ -4,11 +4,14 @@ The SLO-driven construction path (``FitSpec`` -> ``open_index``) and the
 typed query plane's result types (``PointResult``/``RangeResult``) are
 re-exported from ``repro.index`` so serving code has one import."""
 from repro.index.fit import FitSpec, IndexPlan, open_index
+from repro.index.pipeline import (AsyncIndexService, PipelineClosed,
+                                  PipelineOverloaded, open_pipeline)
 from repro.index.query import PointResult, RangeResult
 from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
 
 from .index_service import IndexService
 
-__all__ = ["FitSpec", "IndexPlan", "IndexService", "PointResult",
+__all__ = ["AsyncIndexService", "FitSpec", "IndexPlan", "IndexService",
+           "PipelineClosed", "PipelineOverloaded", "PointResult",
            "RangeResult", "ShardSet", "ShardedIndexService", "ShardStats",
-           "open_index"]
+           "open_index", "open_pipeline"]

@@ -160,6 +160,13 @@ class IndexService:
         """Rank of the smallest key >= each query (leftmost occurrence)."""
         return self._sharded.successor(queries, backend)
 
+    def prewarm(self, backend: str | None = None,
+                batch_sizes=None) -> None:
+        """Build + compile the serving engines (and dispatch tiers) now, so
+        the first batch -- e.g. the async pipeline's first coalesced flush --
+        skips the lazy plan/compile latency spike."""
+        self._sharded.prewarm(backend, batch_sizes=batch_sizes)
+
     def service_stats(self) -> dict:
         """Service-level observability incl. the per-shape query counters."""
         return self._sharded.service_stats()

@@ -8,7 +8,7 @@ import pytest
 
 LAZY_SETS = {
     "repro.index": ["_ENGINE_NAMES", "_SNAPSHOT_NAMES", "_SHARDED_NAMES",
-                    "_FIT_NAMES"],
+                    "_FIT_NAMES", "_PIPELINE_NAMES"],
     "repro.core": ["_JAX_INDEX_NAMES"],
 }
 
@@ -17,6 +17,7 @@ LAZY_HOMES = {  # lazy-set name -> submodule that must define those names
     "_SNAPSHOT_NAMES": "repro.index.snapshot",
     "_SHARDED_NAMES": "repro.index.sharded",
     "_FIT_NAMES": "repro.index.fit",
+    "_PIPELINE_NAMES": "repro.index.pipeline",
     "_JAX_INDEX_NAMES": "repro.core.jax_index",
 }
 
