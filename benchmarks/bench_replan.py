@@ -1,0 +1,227 @@
+"""Closed-loop re-planning under workload drift + cost-model calibration.
+
+Three claims are tracked per PR (wired into ``benchmarks/smoke.py``):
+
+1. **Calibration fixes the latency upper bound** -- the hand-tuned
+   ``CostParams`` defaults under-predict host latency (the ``bench_plan``
+   ``latency_upper_bound_rate`` ~0.5 finding).  Seeding ``c_ns`` from the
+   one-shot ``cost_model.calibrate`` micro-benchmark must push the rate to
+   >= 0.9 on the same sweep; the residual predicted/measured gap is recorded
+   per candidate error (asserted here, not just reported).
+
+2. **Telemetry is effectively free** -- the Monitor's ring-buffer hooks on
+   the lookup hot path (per-tier timing + served-key sampling) must cost
+   <= 5% qps vs the same service with recording disabled (asserted).
+
+3. **The replanner beats a frozen plan under drift** -- phase A serves a
+   calibration mix through a monitored service (all three dispatch tiers,
+   including the interpret-mode pallas tier that the *model* thinks wins big
+   batches but that is orders of magnitude slower on a CPU-only host); one
+   ``Replanner.replan()`` pass re-fits the tier curves from the measured
+   samples and hot-swaps the dispatch thresholds.  Phase B then runs a
+   drifted workload (zipfian probes, batch mix shifted toward the big-batch
+   tier) against the frozen and the replanned service: the replanned p99
+   must beat the frozen p99 (asserted).
+
+Results land in ``out/bench_replan.json`` plus the usual ``emit`` lines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.cost_model import CostParams, calibrate, latency_ns
+from repro.core.datasets import weblogs_like
+from repro.index import FitSpec, make_engine, open_index, plan
+from repro.index.fit import planned_buffer
+from repro.index.table import SegmentTable
+from repro.index.telemetry import Monitor, Replanner
+
+from .common import emit, timeit, write_json
+
+N = 100_000
+NQ = 4_096
+CANDIDATES = (16, 64, 256, 1024)
+OVERHEAD_BATCH = 1024           # served from the (pinned) numpy tier
+OVERHEAD_CALLS = 3200           # total timed lookups, split into alternating
+#                                 enabled/disabled blocks
+DRIFT_REQUESTS = 60
+
+
+# ------------------------------------------------------------- 1. calibration
+def _calibration_sweep(keys, q, candidates):
+    """Predicted-vs-measured over the candidate error sweep, scored twice:
+    with the hand-tuned default ``CostParams`` and with the calibrated ones
+    (each candidate segmented at its buffer-effective error, exactly the
+    planner's scoring form)."""
+    cal = calibrate(keys)
+    sweep = []
+    for e in candidates:
+        eff = max(1, e - planned_buffer(e))
+        table = SegmentTable.from_keys(keys, eff, assume_sorted=True)
+        eng = make_engine(table, "numpy")
+        measured = timeit(eng.lookup, q) / q.size * 1e9
+        pred_def = latency_ns(eff, table.n_segments, CostParams())
+        pred_cal = latency_ns(eff, table.n_segments, cal)
+        sweep.append({"error": e, "measured_ns": measured,
+                      "predicted_ns_default": pred_def,
+                      "predicted_ns_calibrated": pred_cal,
+                      "gap_ratio_default": pred_def / measured,
+                      "gap_ratio_calibrated": pred_cal / measured})
+    rate_def = float(np.mean([s["predicted_ns_default"] >= s["measured_ns"]
+                              for s in sweep]))
+    rate_cal = float(np.mean([s["predicted_ns_calibrated"] >= s["measured_ns"]
+                              for s in sweep]))
+    return {"c_ns_default": CostParams().c_ns, "c_ns_calibrated": cal.c_ns,
+            "sweep": sweep,
+            "latency_upper_bound_rate_default": rate_def,
+            "latency_upper_bound_rate": rate_cal}, cal
+
+
+# ----------------------------------------------------- 2. telemetry overhead
+def _overhead_check(keys, q):
+    """One service, recording enabled vs disabled (the acceptance bar: qps
+    regression vs monitor-disabled).  Same engine objects, same tier --
+    toggling ``Monitor.enabled`` between short alternating timed blocks
+    isolates exactly the recording cost.  Two choices keep the ~0.5us hook
+    measurable at all: the thresholds are pinned so the batch serves from
+    the numpy tier (host calls are deterministic; the device tiers' dispatch
+    jitter and GC interplay swing end-to-end timings by several percent,
+    an order more than the hook), and the median across round ratios shrugs
+    off the occasional scheduler spike landing in one accumulator."""
+    batch = q[:OVERHEAD_BATCH]
+    mon = Monitor()
+    p = plan(keys, FitSpec(error=64, batch_sizes=(1, 256, 4096)),
+             assume_sorted=True)
+    svc = open_index(keys, p.replace(small_max=1 << 20, large_min=1 << 21),
+                     monitor=mon, assume_sorted=True)
+    block, rounds = 25, OVERHEAD_CALLS // 50
+    for _ in range(20):                   # warm the tier's engine
+        svc.lookup(batch)
+
+    def timed_block(enabled):
+        mon.enabled = enabled
+        t0 = time.perf_counter_ns()
+        for _ in range(block):
+            svc.lookup(batch)
+        return time.perf_counter_ns() - t0
+
+    pairs = [(timed_block(False), timed_block(True)) for _ in range(rounds)]
+    mon.enabled = True
+    per_call = block * batch.size * 1e9
+    qps_off = float(np.median([per_call / dis for dis, _ in pairs]))
+    qps_on = float(np.median([per_call / on for _, on in pairs]))
+    overhead = 1.0 - 1.0 / float(np.median([on / dis for dis, on in pairs]))
+    assert overhead <= 0.05, \
+        f"telemetry overhead {overhead:.1%} exceeds the 5% budget"
+    return {"qps_monitor_off": qps_off, "qps_monitor_on": qps_on,
+            "overhead_fraction": overhead}
+
+
+# ------------------------------------------------------------------ 3. drift
+def _drift_requests(rng, keys, heavy, n_requests):
+    """The phase-B drifted workload: zipfian-skewed probe keys and a batch
+    mix shifted toward the big-batch tier (10% heavy) -- the regime where a
+    model-frozen dispatch config pays the interpret-mode pallas tier."""
+    n = keys.size
+    reqs = []
+    for i in range(n_requests):
+        size = heavy if i % 10 == 0 else (32 if i % 10 == 1 else 256)
+        ranks = np.minimum(rng.zipf(1.5, size), n) - 1
+        reqs.append(keys[ranks])
+    return reqs
+
+
+def _serve(svc, requests):
+    lat_us = []
+    for q in requests:
+        t0 = time.perf_counter_ns()
+        svc.lookup(q)
+        lat_us.append((time.perf_counter_ns() - t0) / 1e3)
+    a = np.asarray(lat_us)
+    return {"p50_us": float(np.percentile(a, 50)),
+            "p99_us": float(np.percentile(a, 99))}
+
+
+def _drift_scenario(keys, rng, n_requests):
+    spec = FitSpec(error=64, batch_sizes=(1, 256, 4096))
+    p0 = plan(keys, spec, assume_sorted=True)
+    # the smallest power-of-two batch the frozen plan routes to the big tier
+    heavy = 1 << max(12, int(p0.large_min).bit_length())
+    mon = Monitor(capacity=1 << 14)
+    live = open_index(keys, p0, monitor=mon, assume_sorted=True)
+    frozen = open_index(keys, p0, assume_sorted=True)
+    warm_sizes = (8, 32, 256, 1024, heavy, 2 * heavy)
+    for svc in (live, frozen):
+        svc.prewarm(batch_sizes=warm_sizes)   # compiles outside the timings
+
+    # phase A: calibration traffic through every tier on the live service
+    pool = keys[rng.integers(0, keys.size, size=4 * heavy)]
+    for size, reps in ((1, 8), (8, 8), (32, 8), (256, 8), (1024, 8),
+                      (heavy, 5), (2 * heavy, 4)):
+        for _ in range(reps):
+            live.lookup(pool[:size])
+
+    rp = Replanner(live, interval_s=0.01, hysteresis=0.1, min_tier_samples=5)
+    served = rp.replan()
+    assert served is not None, \
+        f"replanner did not clear the hysteresis bar (win={rp.last_win})"
+    # the swap installs fresh serving handles (fresh jit caches): compile the
+    # post-swap tiers before timing, as AsyncIndexService.apply_plan's
+    # prewarm path does when the swap happens on the maintenance thread
+    live.prewarm(batch_sizes=warm_sizes)
+
+    requests = _drift_requests(rng, keys, heavy, n_requests)
+    frozen_lat = _serve(frozen, requests)
+    live_lat = _serve(live, requests)
+    assert live_lat["p99_us"] < frozen_lat["p99_us"], \
+        f"replanned p99 {live_lat['p99_us']:.0f}us did not beat frozen " \
+        f"{frozen_lat['p99_us']:.0f}us"
+
+    tiers = {t.tier: {"fixed_ns": t.fixed_ns, "per_query_ns": t.per_query_ns}
+             for t in live.metrics().tiers}
+    return {"frozen": {"small_max": p0.small_max, "large_min": p0.large_min,
+                       **frozen_lat},
+            "replanned": {"small_max": served.small_max,
+                          "large_min": served.large_min,
+                          "revision": served.revision,
+                          "predicted_win": rp.last_win, **live_lat},
+            "heavy_batch": heavy,
+            "measured_tier_curves": tiers}
+
+
+def run(n: int = N, n_queries: int = NQ,
+        candidates: tuple[int, ...] = CANDIDATES,
+        n_requests: int = DRIFT_REQUESTS):
+    keys = weblogs_like(n)
+    rng = np.random.default_rng(7)
+    q = keys[rng.integers(0, n, size=n_queries)]
+
+    calibration, _ = _calibration_sweep(keys, q, candidates)
+    rate = calibration["latency_upper_bound_rate"]
+    assert rate >= 0.9, \
+        f"calibrated latency_upper_bound_rate {rate} below the 0.9 bar"
+    overhead = _overhead_check(keys, q)
+    drift = _drift_scenario(keys, rng, n_requests)
+
+    emit("replan", "latency_upper_bound_rate", rate,
+         f"default={calibration['latency_upper_bound_rate_default']}")
+    emit("replan", "telemetry_overhead_pct",
+         overhead["overhead_fraction"] * 100)
+    emit("replan", "p99_us_frozen", drift["frozen"]["p99_us"])
+    emit("replan", "p99_us_replanned", drift["replanned"]["p99_us"],
+         f"win={drift['replanned']['predicted_win']:.2f}")
+
+    results = {"config": {"n": n, "n_queries": n_queries,
+                          "candidates": list(candidates),
+                          "n_requests": n_requests},
+               "calibration": calibration,
+               "telemetry_overhead": overhead,
+               "drift": drift}
+    write_json("bench_replan", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

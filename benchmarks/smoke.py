@@ -16,7 +16,7 @@ import platform
 import time
 
 from . import (bench_insert, bench_lookup, bench_plan, bench_range,
-               bench_rebalance, bench_serving, bench_sharded)
+               bench_rebalance, bench_replan, bench_serving, bench_sharded)
 from .common import write_json
 
 TINY = {
@@ -38,6 +38,14 @@ TINY = {
     "plan": (bench_plan.run,
              dict(n=20_000, n_queries=512, candidates=(16, 64, 256, 1024),
                   batch_sizes=(1, 8, 64, 512))),
+    # the telemetry/replan loop: calibrated latency_upper_bound_rate (>= 0.9
+    # asserted), monitor hot-path overhead (<= 5% asserted), and the
+    # workload-drift frozen-vs-replanned p50/p99 comparison (replanned p99
+    # must win, asserted) -- so the artifact tracks calibration quality and
+    # the feedback loop's health per PR
+    "replan": (bench_replan.run,
+               dict(n=20_000, n_queries=1_024, candidates=(16, 64, 256),
+                    n_requests=40)),
     # the query plane: scan throughput vs selectivity + the point-vs-range
     # head-to-head, so the artifact tracks scan performance per PR
     "range": (bench_range.run,

@@ -40,6 +40,16 @@ range_scan_rows=512)`` folds the range-scan cost term (fixed predecessor
 cost + per-row scan marginal) into every candidate's predicted latency and
 the dispatch-tier crossings.
 
+The telemetry plane (``repro.index.telemetry``) closes the Sec. 6 loop:
+attach a ``Monitor`` (``open_index(keys, spec, monitor=Monitor())``) and the
+dispatch tiers record measured (batch, wall_ns) samples on lock-free rings;
+``svc.metrics()`` returns the typed ``MetricsSnapshot`` tree (JSON
+round-trip), and a ``Replanner`` re-fits the tier cost curves from the
+measurements, re-plans against the served keys, and hot-swaps thresholds /
+shard count / pipeline knobs when the predicted win clears its hysteresis
+bar -- inside an ``AsyncIndexService`` this runs on the maintenance cadence
+thread (``open_pipeline(keys, spec, replan_interval_s=5.0)``).
+
 Everything below the SLO demo is the expert raw-knob path:
 
   * one `SegmentTable`, every engine backend (numpy / xla-window / xla-bisect
@@ -102,8 +112,9 @@ import numpy as np
 
 from repro.index import SegmentTable, available_backends, make_engine, plan
 from repro.kernels.ref import lookup_ref
-from repro.serve import (AsyncIndexService, FitSpec, IndexService,
-                         ShardedIndexService, open_index)
+from repro.serve import (AsyncIndexService, FitSpec, IndexService, Monitor,
+                         Replanner, ServiceMetrics, ShardedIndexService,
+                         open_index)
 
 
 def main():
@@ -163,16 +174,16 @@ def main():
         deadline = time.perf_counter() + 10.0
         # wait for the publish *counter*, not just snapshot visibility --
         # the snapshot installs mid-publish, before the stats update lands
-        st = pipe.pipeline_stats()
-        while st["publishes"] < 1 and time.perf_counter() < deadline:
+        st = pipe.metrics().pipeline
+        while st.publishes < 1 and time.perf_counter() < deadline:
             time.sleep(0.05)
-            st = pipe.pipeline_stats()
-        assert st["publishes"] >= 1, "cadence thread never published"
+            st = pipe.metrics().pipeline
+        assert st.publishes >= 1, "cadence thread never published"
         assert pipe.lookup(np.array([cadence_key]), 30.0)[0] != -1
-    print(f"  async front door: 8 callers x 32 batches -> {st['flushes']} "
-          f"fused flushes ({st['threshold_flushes']} threshold / "
-          f"{st['deadline_flushes']} deadline, max fused batch "
-          f"{st['max_fused_batch']}); background cadence made the insert "
+    print(f"  async front door: 8 callers x 32 batches -> {st.flushes} "
+          f"fused flushes ({st.threshold_flushes} threshold / "
+          f"{st.deadline_flushes} deadline, max fused batch "
+          f"{st.max_fused_batch}); background cadence made the insert "
           f"visible with no caller publish()\n")
 
     # --- the typed query plane: point vs range vs count -------------------
@@ -191,8 +202,43 @@ def main():
           f"[{res.lo_rank}, {res.hi_rank}) = {res.count} keys "
           f"(count-only agrees: {n_only}); point found {pt.n_found}/4; "
           f"predecessor({hi:.0f}+0.5) = rank {pred.rank[0]}")
-    shapes = scan_svc.service_stats()["query_counts"]
+    shapes = scan_svc.metrics().query_counts
     print(f"  query counters: {shapes}\n")
+
+    # --- telemetry + online re-planning: measure -> re-fit -> hot-swap ----
+    # a Monitor records per-tier (batch, wall_ns) samples on the dispatch
+    # hot path (lock-free ring writes, ~0.5us); metrics() returns the typed
+    # snapshot tree; a Replanner re-fits the tier cost curves from the
+    # measurements and hot-swaps the plan when the predicted win is real.
+    mon = Monitor()
+    live = open_index(keys, FitSpec(error=args.error,
+                                    batch_sizes=(1, 256, 1024)),
+                      monitor=mon)
+    for size in (1, 8, 32, 256, 1024):      # traffic across the tiers
+        for _ in range(10):
+            live.lookup(keys[rng.integers(0, args.n, size)])
+    m = live.metrics()
+    assert ServiceMetrics.from_json(m.to_json()) == m  # dashboard-ready
+    print(f"  telemetry: plan rev {m.plan_revision}, "
+          f"{sum(t.calls for t in m.tiers)} dispatched calls")
+    for t in m.tiers:
+        fit = (f"measured curve {t.fixed_ns:.0f} + {t.per_query_ns:.1f}*b ns"
+               if t.per_query_ns is not None else "too few samples to fit")
+        print(f"    tier {t.tier:6s}: {t.calls} calls, "
+              f"mean batch {t.mean_batch:.0f}; {fit}")
+    old_sm, old_lg = live.plan.small_max, live.plan.large_min
+    rp = Replanner(live, interval_s=0.01, hysteresis=0.05,
+                   min_tier_samples=8)
+    served = rp.replan()                    # the maintenance cadence calls
+    if served is not None:                  # rp.step() for you in a pipeline
+        print(f"  replanner: measured curves beat the model by "
+              f"{rp.last_win:.0%} on the observed mix -> hot-swapped "
+              f"thresholds ({old_sm}, {old_lg}) -> ({served.small_max}, "
+              f"{served.large_min}), plan rev {served.revision} "
+              f"(readers never torn)\n")
+    else:
+        print(f"  replanner: predicted win {rp.last_win} below the "
+              f"hysteresis bar -> plan kept (no flapping)\n")
 
     # --- expert raw-knob path from here down
     q = jnp.asarray(keys[rng.integers(0, args.n, args.queries)], jnp.float32)
@@ -253,7 +299,7 @@ def main():
     print(f"  sharded: {args.shards} shards, {lo_hi.size} inserts into "
           f"shards {sorted(published)}; publish {dt*1e3:.1f} ms touched "
           f"only those (epochs now {epochs})")
-    for s in sharded.stats():
+    for s in sharded.metrics().shards:
         print(f"    shard {s.shard}: epoch {s.epoch}, {s.n_segments} segs, "
               f"{s.n_keys} keys, {s.pending_inserts} pending")
 
@@ -280,7 +326,7 @@ def main():
               f"{info['imbalance_after']:.2f}, moved {info['moved_keys']} "
               f"keys in {dt*1e3:.1f} ms; ShardSet v{reb.shard_set.version} "
               f"swapped atomically (lookups still oracle-exact)")
-        for s in reb.stats():
+        for s in reb.metrics().shards:
             print(f"    shard {s.shard}: cut {s.boundary:.0f} (routes), "
                   f"snapshot starts {s.snapshot_first_key:.0f}, "
                   f"{s.n_keys} keys, epoch {s.epoch}")

@@ -200,24 +200,18 @@ def tier_cost_curves(error: int, n_segments: int,
     }
 
 
-def dispatch_thresholds(error: int, n_segments: int,
-                        cpu: CostParams | None = None,
-                        tpu: TPUCostParams | None = None,
-                        range_fraction: float = 0.0,
-                        scan_rows: float = 0.0) -> tuple[int, int]:
-    """Cost-model-calibrated ``(small_max, large_min)`` for ``DispatchEngine``:
-    the batch sizes where the modeled per-tier latency curves cross.
+def curve_crossings(curves: dict[str, tuple[float, float]]) -> tuple[int, int]:
+    """``(small_max, large_min)`` where the per-tier affine cost curves cross.
 
-    ``small_max`` is the largest batch the host tier still wins (the medium
-    tier's fixed launch cost amortizes beyond it); ``large_min`` the smallest
-    batch where the Pallas tier's extra plan cost pays for its lower marginal
-    cost.  Degenerate slopes (a tier whose marginal cost is not strictly
-    better than its predecessor's) push the crossing to the extreme, so the
-    invariant ``0 <= small_max < large_min`` always holds.
-    ``range_fraction``/``scan_rows`` make the crossings scan-aware (see
-    :func:`tier_cost_curves`)."""
-    curves = tier_cost_curves(error, n_segments, cpu, tpu,
-                              range_fraction, scan_rows)
+    ``curves`` maps the three ``DispatchEngine`` tiers to ``(fixed_ns,
+    per_query_ns)`` pairs -- modeled (:func:`tier_cost_curves`), measured
+    (:func:`fit_tier_curves`), or a mixture.  ``small_max`` is the largest
+    batch the host tier still wins (the medium tier's fixed launch cost
+    amortizes beyond it); ``large_min`` the smallest batch where the large
+    tier's extra plan cost pays for its lower marginal cost.  Degenerate
+    slopes (a tier whose marginal cost is not strictly better than its
+    predecessor's) push the crossing to the extreme, so the invariant
+    ``0 <= small_max < large_min`` always holds."""
     (f_s, p_s), (f_m, p_m), (f_l, p_l) = (
         curves["small"], curves["medium"], curves["large"])
     if p_s > p_m:
@@ -229,3 +223,128 @@ def dispatch_thresholds(error: int, n_segments: int,
     else:                  # pallas never wins per-query: effectively disabled
         large_min = max(small_max + 1, 1 << 31)
     return small_max, large_min
+
+
+def dispatch_thresholds(error: int, n_segments: int,
+                        cpu: CostParams | None = None,
+                        tpu: TPUCostParams | None = None,
+                        range_fraction: float = 0.0,
+                        scan_rows: float = 0.0) -> tuple[int, int]:
+    """Cost-model-calibrated ``(small_max, large_min)`` for ``DispatchEngine``:
+    the batch sizes where the modeled per-tier latency curves cross (see
+    :func:`curve_crossings`).  ``range_fraction``/``scan_rows`` make the
+    crossings scan-aware (see :func:`tier_cost_curves`)."""
+    return curve_crossings(tier_cost_curves(error, n_segments, cpu, tpu,
+                                            range_fraction, scan_rows))
+
+
+# ----------------------------------------------- measured-curve re-calibration
+def fit_tier_curves(samples: dict[str, np.ndarray | Sequence],
+                    min_samples: int = 8
+                    ) -> dict[str, tuple[float, float]]:
+    """Least-squares re-fit of the per-tier affine cost curves from measured
+    ``(batch_size, wall_ns)`` samples (e.g. a telemetry ``Monitor``'s
+    ``tier.*`` channels): ``{tier: (fixed_ns, per_query_ns)}``.
+
+    To keep one-off spikes (first-call compiles, scheduler hiccups) from
+    skewing the fixed/marginal split, the line is fit through the *median*
+    latency per distinct batch size, weighted by how often that size was
+    seen.  Tiers with fewer than ``min_samples`` rows or fewer than two
+    distinct batch sizes are omitted -- callers fall back to the modeled
+    curve (:func:`tier_cost_curves`) for those.  Coefficients are clamped
+    non-negative (a latency curve cannot slope down)."""
+    out: dict[str, tuple[float, float]] = {}
+    for tier, rows in samples.items():
+        a = np.asarray(rows, np.float64).reshape(-1, 2)
+        if a.shape[0] < min_samples:
+            continue
+        sizes = np.unique(a[:, 0])
+        if sizes.size < 2:
+            continue
+        med = np.array([np.median(a[a[:, 0] == s, 1]) for s in sizes])
+        wts = np.array([float((a[:, 0] == s).sum()) for s in sizes])
+        per, fixed = np.polyfit(sizes, med, 1, w=np.sqrt(wts))
+        out[tier] = (max(float(fixed), 0.0), max(float(per), 0.0))
+    return out
+
+
+def refit_params(curves: dict[str, tuple[float, float]],
+                 error: int, n_segments: int,
+                 cpu: CostParams | None = None,
+                 tpu: TPUCostParams | None = None
+                 ) -> tuple[CostParams, TPUCostParams]:
+    """Invert measured tier curves back into ``(CostParams, TPUCostParams)``.
+
+    The inverse of :func:`tier_cost_curves` at the serving configuration
+    ``(error, n_segments)``: each measured coefficient pins the model
+    parameter that produces it, so re-running the Sec. 6 planner with the
+    returned params reproduces the measured curves (modulo non-negativity
+    clamps).  Tiers absent from ``curves`` leave their parameters at the
+    prior's value; ``cpu``/``tpu`` default to the hand-tuned constants."""
+    cpu = cpu or CostParams()
+    tpu = tpu or TPUCostParams()
+    steps = math.ceil(math.log2(2 * max(error, 1) + 2))
+    window_bytes = (2 * error + 2) * tpu.bytes_per_key
+    levels = max(1, math.ceil(
+        math.log(max(n_segments, 2), TPU_ROUTER_FANOUT)))
+    if "small" in curves:
+        # host marginal = c_ns * (log_b(S_e) + log2(e)): snapshot lookups pay
+        # no buffer-scan term (see tier_cost_curves)
+        denom = (math.log(max(n_segments, 2), cpu.fanout)
+                 + math.log2(max(error, 2)))
+        cpu = dataclasses.replace(
+            cpu, c_ns=max(curves["small"][1] / max(denom, 1e-9), 1e-3))
+    if "medium" in curves:
+        fixed, per = curves["medium"]
+        tpu = dataclasses.replace(
+            tpu,
+            launch_ns=max(fixed - tpu.dma_setup_ns, 0.0),
+            vmem_step_ns=max(per / (steps + levels), 1e-6))
+    if "large" in curves:
+        fixed, per = curves["large"]
+        tpu = dataclasses.replace(
+            tpu,
+            plan_ns=max(fixed - tpu.launch_ns - tpu.dma_setup_ns, 0.0),
+            hbm_gbps=window_bytes / max(per - tpu.vmem_step_ns, 1e-6))
+    return cpu, tpu
+
+
+def calibrate(keys: np.ndarray, engine=None, *,
+              errors: Sequence[int] = (16, 256), batch: int = 1024,
+              repeats: int = 3, safety: float = 1.3) -> CostParams:
+    """One-shot micro-calibration of ``CostParams.c_ns`` against this host.
+
+    Seeds the Sec. 6 latency model from a measurement instead of the paper's
+    hand-tuned 50ns constant: builds a published-snapshot table at each
+    anchor ``error``, times a ``batch``-sized host lookup (best of
+    ``repeats``), and solves Eq. 1 for the ``c_ns`` that reproduces it --
+    ``measured_per_query = c_ns * (log_b(S_e) + log2(e))`` (no buffer term:
+    snapshots carry no insert buffer).  The worst anchor times ``safety``
+    keeps the model an upper bound across the error sweep, which is what
+    planner SLA admission (``choose_error_for_latency``) needs.
+
+    ``engine`` substitutes a lookup callable ``engine(queries)`` timed in
+    place of the host ``numpy_lookup``; by default the host tier is measured,
+    matching the paper's cache-miss model."""
+    from repro.index.table import SegmentTable, numpy_lookup  # lazy: no cycle
+    import time
+    keys = np.asarray(keys, np.float64)
+    if not np.all(np.diff(keys) >= 0):
+        keys = np.sort(keys, kind="stable")
+    q = np.resize(keys, max(int(batch), 1))
+    worst = 0.0
+    for e in sorted(set(int(e) for e in errors)):
+        table = SegmentTable.from_keys(keys, e, assume_sorted=True)
+        fn = engine if engine is not None else (
+            lambda qq, t=table: numpy_lookup(t, qq))
+        fn(q)  # warm caches / compiles before timing
+        best = float("inf")
+        for _ in range(max(int(repeats), 1)):
+            t0 = time.perf_counter_ns()
+            fn(q)
+            best = min(best, time.perf_counter_ns() - t0)
+        per_query = best / q.size
+        denom = (math.log(max(table.n_segments, 2), CostParams.fanout)
+                 + math.log2(max(e, 2)))
+        worst = max(worst, per_query / max(denom, 1e-9))
+    return dataclasses.replace(CostParams(), c_ns=max(worst * safety, 1e-3))

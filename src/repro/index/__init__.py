@@ -28,6 +28,10 @@ Module map (see ROADMAP.md):
   pipeline.py -- ``AsyncIndexService``/``open_pipeline``: the coalescing
                  async front door (concurrent callers fuse into one
                  fast-tier batch) + the background publish/rebalance cadence
+  telemetry.py - ``Monitor`` (lock-free named-channel recorder, in-memory /
+                 JSONL backends), the typed ``MetricsSnapshot`` tree
+                 (``ServiceMetrics``), and ``Replanner`` -- the measure ->
+                 re-fit -> re-plan feedback loop hot-swapping plans live
 
 ``table`` and ``query`` are imported eagerly (pure numpy); the
 engine/snapshot/sharded/fit names are resolved lazily (PEP 562) so host-only
@@ -53,13 +57,17 @@ _FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
               "open_index", "plan"}
 _PIPELINE_NAMES = {"AsyncIndexService", "PipelineClosed",
                    "PipelineOverloaded", "open_pipeline"}
+_TELEMETRY_NAMES = {"JSONLBackend", "MemoryBackend", "MetricsSnapshot",
+                    "Monitor", "PipelineMetrics", "Replanner",
+                    "ServiceMetrics", "ShardMetrics", "TierMetrics",
+                    "tier_metrics"}
 
 __all__ = [
     "PointResult", "QueryVerbs", "RangeResult", "SegmentTable",
     "build_shard_tables", "numpy_lookup", "numpy_search", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
-    *sorted(_FIT_NAMES), *sorted(_PIPELINE_NAMES),
+    *sorted(_FIT_NAMES), *sorted(_PIPELINE_NAMES), *sorted(_TELEMETRY_NAMES),
 ]
 
 
@@ -79,4 +87,7 @@ def __getattr__(name):
     if name in _PIPELINE_NAMES:
         from . import pipeline
         return getattr(pipeline, name)
+    if name in _TELEMETRY_NAMES:
+        from . import telemetry
+        return getattr(telemetry, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 from typing import Callable, Literal, NamedTuple, Protocol, runtime_checkable
 
 import jax
@@ -509,12 +510,20 @@ class DispatchEngine(QueryVerbs):
     sizes where the modeled per-tier latency curves cross), so the breakpoints
     track the data instead of being magic constants.  Pass explicit values to
     pin them (e.g. from a measured sweep or an ``IndexPlan``).
+
+    ``monitor`` (a ``repro.index.telemetry.Monitor``) turns on per-tier
+    telemetry: every routed ``lookup``/``search`` records ``(batch_size,
+    wall_ns)`` on the ``tier.<small|medium|large>`` channel, which is exactly
+    the sample shape ``repro.core.cost_model.fit_tier_curves`` re-fits the
+    tier cost curves from.  ``None`` (the default) keeps the hot path
+    record-free.
     """
 
     def __init__(self, table: SegmentTable, *, small_max: int | None = None,
                  large_min: int | None = None, small: str = "numpy",
                  medium: str = "xla-bisect", large: str = "pallas",
-                 engine_opts: dict[str, dict] | None = None):
+                 engine_opts: dict[str, dict] | None = None,
+                 monitor=None):
         if small_max is None and large_min is None:
             # lazy: keep jax-module import light; cost_model is numpy-only
             from repro.core.cost_model import dispatch_thresholds
@@ -533,17 +542,22 @@ class DispatchEngine(QueryVerbs):
         self.small_max = int(small_max)
         self.large_min = int(large_min)
         self.tiers = {"small": small, "medium": medium, "large": large}
+        self.monitor = monitor
         self._engine_opts = engine_opts or {}
         self._engines: dict[str, LookupEngine] = {}
         self._lock = threading.Lock()
 
+    def tier_for(self, batch_size: int) -> str:
+        """The tier (``small``/``medium``/``large``) a batch routes to."""
+        if batch_size <= self.small_max:
+            return "small"
+        if batch_size < self.large_min:
+            return "medium"
+        return "large"
+
     def backend_for(self, batch_size: int) -> str:
         """The tier backend a batch of ``batch_size`` queries dispatches to."""
-        if batch_size <= self.small_max:
-            return self.tiers["small"]
-        if batch_size < self.large_min:
-            return self.tiers["medium"]
-        return self.tiers["large"]
+        return self.tiers[self.tier_for(batch_size)]
 
     def engine_for(self, batch_size: int) -> LookupEngine:
         name = self.backend_for(batch_size)
@@ -558,13 +572,30 @@ class DispatchEngine(QueryVerbs):
         return eng
 
     def lookup(self, queries) -> np.ndarray:
-        return self.engine_for(int(np.size(queries))).lookup(queries)
+        n = int(np.size(queries))
+        eng = self.engine_for(n)
+        mon = self.monitor
+        if mon is None:
+            return eng.lookup(queries)
+        t0 = time.perf_counter_ns()
+        out = eng.lookup(queries)
+        # channel name matches repro.index.telemetry.CH_TIER_PREFIX
+        mon.record("tier." + self.tier_for(n), n, time.perf_counter_ns() - t0)
+        return out
 
     def search(self, queries, side: str = "left") -> np.ndarray:
         """The query plane's primitive, routed by batch size exactly like
         ``lookup`` (every tier returns identical insertion ranks for exact-f32
         workloads, so dispatch stays semantics-preserving)."""
-        return self.engine_for(int(np.size(queries))).search(queries, side)
+        n = int(np.size(queries))
+        eng = self.engine_for(n)
+        mon = self.monitor
+        if mon is None:
+            return eng.search(queries, side)
+        t0 = time.perf_counter_ns()
+        out = eng.search(queries, side)
+        mon.record("tier." + self.tier_for(n), n, time.perf_counter_ns() - t0)
+        return out
 
     def prewarm(self, batch_sizes=None) -> None:
         """Opt-in eager tier construction + compilation.

@@ -295,10 +295,17 @@ class IndexPlan:
     n_keys: int = 0                  # keys the plan was computed over
     candidates: tuple[PlanCandidate, ...] = ()
     spec: FitSpec | None = None
+    # revision story: 0 = the plan open_index()/plan() produced; every
+    # replace() (and every Replanner hot-swap) bumps it, so `svc.plan`
+    # always names the currently-served revision and explain() diffs are
+    # auditable instead of knobs mutating in place.
+    revision: int = 0
 
     def __post_init__(self):
         if self.error < 1:
             raise ValueError(f"plan error must be >= 1, got {self.error}")
+        if self.revision < 0:
+            raise ValueError(f"revision must be >= 0, got {self.revision}")
         if self.n_shards < 1:
             raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
         if (self.small_max is None) != (self.large_min is None):
@@ -325,6 +332,22 @@ class IndexPlan:
                    buffer_size=int(buffer_size), backend=backend,
                    publish_every=publish_every, objective="raw")
 
+    # --------------------------------------------------------------- revision
+    def replace(self, **knobs) -> "IndexPlan":
+        """A new frozen plan with ``knobs`` applied and ``revision`` bumped.
+
+        The only sanctioned way to derive a changed configuration from a
+        served plan: the original stays immutable, the successor carries
+        ``revision + 1``, and ``explain()`` on both sides gives an auditable
+        before/after.  ``revision`` itself cannot be passed."""
+        if "revision" in knobs:
+            raise ValueError("revision is managed by replace(); it always "
+                             "becomes the source plan's revision + 1")
+        unknown = set(knobs) - {f.name for f in dataclasses.fields(self)}
+        if unknown:
+            raise ValueError(f"unknown IndexPlan knobs: {sorted(unknown)}")
+        return dataclasses.replace(self, revision=self.revision + 1, **knobs)
+
     # ------------------------------------------------------------ constructor
     def merge_engine_opts(self, engine_opts: dict[str, dict] | None
                           ) -> dict[str, dict] | None:
@@ -347,6 +370,7 @@ class IndexPlan:
             unit = "ns" if self.objective == "latency" else "B"
             head += f" (budget {self.budget:g} {unit})"
         head += f", hardware={self.hardware}, planned over {self.n_keys} keys"
+        head += f", revision={self.revision}"
         lines = [
             head,
             f"  error={self.error}  n_shards={self.n_shards}  "

@@ -63,12 +63,18 @@ and parking it would only add deadline latency for no batching win.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
+import warnings
 from concurrent.futures import Future
 from typing import TYPE_CHECKING
 
 import numpy as np
+
+from .telemetry import (CH_FLUSH, CH_QUEUE_DEPTH, CH_SOJOURN, FLUSH_DEADLINE,
+                        FLUSH_DRAIN, FLUSH_INLINE, FLUSH_THRESHOLD, Monitor,
+                        PipelineMetrics, Replanner, ServiceMetrics)
 
 if TYPE_CHECKING:   # the service types are duck-typed at runtime
     from .fit import FitSpec, IndexPlan
@@ -88,14 +94,17 @@ class PipelineOverloaded(RuntimeError):
 
 
 class _Request:
-    """One caller's queued submission: queries + the future to resolve."""
-    __slots__ = ("queries", "shape", "future")
+    """One caller's queued submission: queries + the future to resolve.
+    ``t_enq`` stamps the enqueue time so the flusher can report per-request
+    sojourn (queue wait + fused service call) to the monitor."""
+    __slots__ = ("queries", "shape", "future", "t_enq")
 
     def __init__(self, queries: np.ndarray, shape: tuple[int, ...],
                  future: Future):
         self.queries = queries
         self.shape = shape
         self.future = future
+        self.t_enq = time.perf_counter_ns()
 
 
 class AsyncIndexService:
@@ -135,8 +144,21 @@ class AsyncIndexService:
                  publish_interval_s: float | None = None,
                  backend: str | None = None,
                  pad_batches: bool = True,
-                 prewarm: bool = True):
+                 prewarm: bool = True,
+                 monitor: Monitor | None = None,
+                 replanner: Replanner | None = None):
         plan = getattr(service, "plan", None)
+        # telemetry defaults to the service's monitor so the pipeline channels
+        # (queue depth / flush cause / sojourn) land next to the tier samples
+        self.monitor = monitor if monitor is not None \
+            else getattr(service, "monitor", None)
+        self.replanner = replanner
+        if replanner is not None:
+            replanner.pipeline = self     # replan swaps reach the flush knobs
+            if publish_interval_s is None:
+                # the replanner rides the maintenance cadence: make sure the
+                # cadence thread exists even for a read-only plan
+                publish_interval_s = replanner.interval_s
         if flush_threshold is None:
             flush_threshold = getattr(plan, "flush_threshold", None)
         if flush_threshold is None:
@@ -247,6 +269,8 @@ class AsyncIndexService:
             self._check_open()
             with self._lock:
                 self._stats["inline_batches"] += 1
+            if self.monitor is not None:
+                self.monitor.record(CH_FLUSH, FLUSH_INLINE, int(q.size))
             try:
                 fut.set_result(self._run(kind, q).reshape(shape))
             except BaseException as exc:  # surfaced via the future
@@ -308,10 +332,15 @@ class AsyncIndexService:
             self._space.notify_all()
         return batches
 
-    def _flush(self, batches: list[tuple[tuple, list[_Request]]]) -> None:
+    def _flush(self, batches: list[tuple[tuple, list[_Request]]],
+               cause: int = FLUSH_DRAIN) -> None:
         """Fuse each verb bucket into one service call; scatter per-caller
         slices back through the futures.  An exception fails exactly the
-        futures of the batch that raised it."""
+        futures of the batch that raised it.  ``cause`` is the flush-trigger
+        code (:data:`FLUSH_THRESHOLD`/`FLUSH_DEADLINE`/`FLUSH_DRAIN`)
+        recorded per fused bucket on the monitor, alongside each resolved
+        request's sojourn (enqueue -> result) -- both off the caller path."""
+        mon = self.monitor
         for kind, reqs in batches:
             fused = (reqs[0].queries if len(reqs) == 1
                      else np.concatenate([r.queries for r in reqs]))
@@ -320,6 +349,8 @@ class AsyncIndexService:
                 self._stats["coalesced_queries"] += int(fused.size)
                 self._stats["max_fused_batch"] = max(
                     self._stats["max_fused_batch"], int(fused.size))
+            if mon is not None:
+                mon.record(CH_FLUSH, cause, int(fused.size))
             try:
                 out = self._run(kind, fused)
             except BaseException as exc:
@@ -331,30 +362,39 @@ class AsyncIndexService:
                 n = r.queries.size
                 r.future.set_result(out[off:off + n].reshape(r.shape))
                 off += n
+            if mon is not None:
+                now = time.perf_counter_ns()
+                for r in reqs:
+                    mon.record(CH_SOJOURN, now - r.t_enq)
 
     def _flush_loop(self) -> None:
         try:
             while True:
                 with self._lock:
+                    cause = FLUSH_DRAIN
                     while True:
                         if self._closed:
                             break
                         now = time.monotonic()
                         if self._queued >= self.flush_threshold:
                             self._stats["threshold_flushes"] += 1
+                            cause = FLUSH_THRESHOLD
                             break
                         if self._oldest is not None:
                             expires = self._oldest + self.max_wait_us * 1e-6
                             if now >= expires:
                                 self._stats["deadline_flushes"] += 1
+                                cause = FLUSH_DEADLINE
                                 break
                             self._work.wait(expires - now)
                         else:
                             self._work.wait()
                     if self._closed:
                         return          # close() drains under its own lock
+                    if self.monitor is not None:
+                        self.monitor.record(CH_QUEUE_DEPTH, self._queued)
                     batches = self._take_batches()
-                self._flush(batches)
+                self._flush(batches, cause)
         except BaseException as exc:     # pragma: no cover - defensive
             self._record_fatal(exc)
 
@@ -378,6 +418,10 @@ class AsyncIndexService:
                     self._stats["maintenance_ticks"] += 1
                     if did_publish:
                         self._stats["publishes"] += 1
+                if self.replanner is not None:
+                    # measured telemetry -> re-fit -> (maybe) hot-swap, all on
+                    # this thread; rate-limited by the replanner's interval
+                    self.replanner.step()
         except BaseException as exc:
             self._record_fatal(exc)
 
@@ -409,6 +453,57 @@ class AsyncIndexService:
         """Manual publish passthrough (the cadence thread's tick, on demand)."""
         return self.service.publish()
 
+    # ---------------------------------------------------------- reconfiguring
+    def apply_knobs(self, *, flush_threshold: int | None = None,
+                    max_wait_us: float | None = None,
+                    queue_depth: int | None = None) -> None:
+        """Hot-swap the coalescing knobs (None keeps the current value).
+        Validated together under the queue lock -- the same invariants as
+        construction -- then both conditions wake: blocked submitters re-check
+        the new depth, the flusher re-arms against the new threshold and
+        deadline.  In-flight futures are untouched."""
+        with self._lock:
+            ft = (self.flush_threshold if flush_threshold is None
+                  else int(flush_threshold))
+            mw = self.max_wait_us if max_wait_us is None else float(max_wait_us)
+            qd = self.queue_depth if queue_depth is None else int(queue_depth)
+            if ft < 1:
+                raise ValueError(f"flush_threshold must be >= 1, got {ft!r}")
+            if mw <= 0:
+                raise ValueError(f"max_wait_us must be > 0, got {mw!r}")
+            if qd < ft:
+                raise ValueError(f"queue_depth ({qd}) must be >= "
+                                 f"flush_threshold ({ft})")
+            self.flush_threshold, self.max_wait_us, self.queue_depth = \
+                ft, mw, qd
+            self._work.notify_all()
+            self._space.notify_all()
+
+    def apply_plan(self, plan: "IndexPlan", *, prewarm: bool = False) -> None:
+        """Adopt a (re)planned configuration's pipeline knobs -- the
+        ``Replanner`` swap path.  Missing plan knobs keep their current
+        values; a plan that moves the threshold without pinning a depth gets
+        ``DEFAULT_QUEUE_DEPTH_FLUSHES``x headroom (never shrinking the
+        current depth below the new threshold's requirement).  The publish
+        cadence re-resolves when the maintenance thread is running.  Pass
+        ``prewarm=True`` to compile the new threshold's batch bucket before
+        the next flush."""
+        ft = plan.flush_threshold
+        if ft is None:
+            ft = plan.large_min
+        qd = plan.queue_depth
+        if qd is None and ft is not None:
+            qd = max(self.queue_depth,
+                     DEFAULT_QUEUE_DEPTH_FLUSHES * int(ft))
+        self.apply_knobs(flush_threshold=ft, max_wait_us=plan.max_wait_us,
+                         queue_depth=qd)
+        if self._maintenance is not None:
+            interval = _plan_publish_interval(plan)
+            if interval is not None:
+                self.publish_interval_s = interval  # read every cadence tick
+        if prewarm:
+            self.prewarm()
+
     @property
     def closed(self) -> bool:
         return self._closed
@@ -425,14 +520,22 @@ class AsyncIndexService:
             raise PipelineClosed("pipeline is closed")
 
     def pipeline_stats(self) -> dict:
-        """Counters: flushes by trigger, fused batch sizes, publishes."""
+        """Deprecated: use :meth:`metrics`\\ ``().pipeline``.  The legacy
+        counter dict (flushes by trigger, fused batch sizes, knobs)."""
+        warnings.warn("AsyncIndexService.pipeline_stats() is deprecated; "
+                      "use metrics().pipeline", DeprecationWarning,
+                      stacklevel=2)
+        return dataclasses.asdict(self._pipeline_metrics())
+
+    def _pipeline_metrics(self) -> PipelineMetrics:
         with self._lock:
-            out = dict(self._stats)
-            out["queued"] = self._queued
-        out["flush_threshold"] = self.flush_threshold
-        out["max_wait_us"] = self.max_wait_us
-        out["queue_depth"] = self.queue_depth
-        return out
+            stats = dict(self._stats)
+            queued = self._queued
+        rp = self.replanner
+        return PipelineMetrics(
+            **stats, queued=queued, flush_threshold=self.flush_threshold,
+            max_wait_us=self.max_wait_us, queue_depth=self.queue_depth,
+            replans=0 if rp is None else rp.replans)
 
     def close(self, timeout: float = 10.0) -> None:
         """Drain queued requests (their futures complete), stop both threads,
@@ -469,11 +572,28 @@ class AsyncIndexService:
                 raise
 
     # ----------------------------------------------------------- observability
+    def metrics(self) -> ServiceMetrics:
+        """The wrapped service's typed snapshot with the pipeline's counters
+        and knobs attached as :class:`PipelineMetrics` -- the one
+        observability surface for the whole serving stack."""
+        return dataclasses.replace(self.service.metrics(),
+                                   pipeline=self._pipeline_metrics())
+
     def service_stats(self) -> dict:
-        """The wrapped service's stats plus the pipeline counters."""
-        out = self.service.service_stats()
-        out["pipeline"] = self.pipeline_stats()
-        return out
+        """Deprecated: use :meth:`metrics`.  The wrapped service's legacy
+        dict plus the pipeline counters, derived from the typed snapshot."""
+        warnings.warn("AsyncIndexService.service_stats() is deprecated; "
+                      "use metrics()", DeprecationWarning, stacklevel=2)
+        m = self.metrics()
+        return {"version": m.shard_set_version,
+                "n_shards": m.n_shards,
+                "imbalance": m.imbalance,
+                "rebalances": m.rebalances,
+                "rebalance_skipped": m.rebalance_skipped,
+                "last_rebalance": m.last_rebalance,
+                "pending_inserts": m.pending_inserts,
+                "query_counts": m.query_counts,
+                "pipeline": dataclasses.asdict(m.pipeline)}
 
 
 def _bucket_size(n: int) -> int:
@@ -503,14 +623,22 @@ def open_pipeline(keys, spec_or_plan: "FitSpec | IndexPlan", *,
                   queue_depth: int | None = None,
                   publish_interval_s: float | None = None,
                   prewarm: bool = True,
+                  replan_interval_s: float | None = None,
                   **service_kwargs) -> AsyncIndexService:
     """SLO-driven construction of the whole serving pipeline: resolve the
     spec (``fit.plan``), build the service (``fit.open_index``), and wrap it
     in the coalescing front door with the plan's pipeline knobs.  Extra
-    ``service_kwargs`` pass through to the service constructor."""
+    ``service_kwargs`` pass through to the service constructor (notably
+    ``monitor=Monitor()`` to turn telemetry on).  ``replan_interval_s``
+    additionally attaches a :class:`repro.index.telemetry.Replanner` on the
+    maintenance cadence (requires a monitor), closing the measure -> re-fit
+    -> re-plan loop."""
     from .fit import open_index
     svc = open_index(keys, spec_or_plan, payload=payload, **service_kwargs)
+    replanner = None
+    if replan_interval_s is not None:
+        replanner = Replanner(svc, interval_s=replan_interval_s)
     return AsyncIndexService(svc, flush_threshold=flush_threshold,
                              max_wait_us=max_wait_us, queue_depth=queue_depth,
                              publish_interval_s=publish_interval_s,
-                             prewarm=prewarm)
+                             prewarm=prewarm, replanner=replanner)

@@ -50,7 +50,10 @@ any future multi-host serving tier consume.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
+import time
+import warnings
 from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import numpy as np
@@ -60,9 +63,28 @@ from repro.index.table import (SegmentTable, route_keys, shard_boundaries,
 
 from .query import PointResult, RangeResult, check_range, check_side
 from .snapshot import ServingHandle, Snapshot, SnapshotPublisher
+from .telemetry import (CH_PUBLISH, CH_QUERY_MIX, CH_REBALANCE,
+                        CH_SERVED_KEYS, CH_SHARD_LOAD, CH_SKEW, Monitor,
+                        ServiceMetrics, ShardMetrics, tier_metrics)
 
 if TYPE_CHECKING:  # runtime import is lazy (fit builds services via plans)
     from .fit import IndexPlan
+
+# every Nth lookup/search call contributes a key sample to the served-keys
+# reservoir (CH_SERVED_KEYS); keeps the hot-path telemetry cost amortized
+_KEY_SAMPLE_EVERY = 8
+_KEY_SAMPLE_WIDTH = 64
+
+
+def _inject_monitor(engine_opts: dict[str, dict],
+                    monitor: Monitor | None) -> dict[str, dict]:
+    """Thread the service's monitor into the dispatch-engine kwargs (the
+    per-tier latency hook) without mutating the caller's / the plan's dict."""
+    if monitor is None:
+        return engine_opts
+    opts = {k: dict(v) for k, v in (engine_opts or {}).items()}
+    opts.setdefault("dispatch", {})["monitor"] = monitor
+    return opts
 
 
 class PackedShardTables(NamedTuple):
@@ -197,7 +219,8 @@ class ShardedIndexService:
                  skew_threshold: float = 2.0,
                  pending_weight: float = 1.0,
                  auto_rebalance: bool = False,
-                 assume_sorted: bool = False):
+                 assume_sorted: bool = False,
+                 monitor: Monitor | None = None):
         # lazy: repro.core.tree imports repro.index.table at module level
         from repro.core.tree import FITingTree
         from .fit import IndexPlan
@@ -225,7 +248,9 @@ class ShardedIndexService:
         error, n_shards = plan.error, plan.n_shards
         buffer_size, backend = plan.buffer_size, plan.backend
         publish_every = plan.publish_every
-        engine_opts = plan.merge_engine_opts(engine_opts)
+        self.monitor = monitor
+        engine_opts = _inject_monitor(plan.merge_engine_opts(engine_opts),
+                                      monitor)
 
         if publish_every is not None and buffer_size == 0:
             raise ValueError("publish_every requires buffer_size > 0 "
@@ -245,6 +270,13 @@ class ShardedIndexService:
         self.default_backend = backend
         self.publish_every = publish_every
         self.has_payload = payload is not None
+        self._mode = mode
+        # serializes the mutators (insert/publish/rebalance/apply_plan);
+        # re-entrant because insert -> publish -> rebalance nests, and a
+        # Replanner swap may land while a cadence publish holds the lock.
+        # Readers never take it: they pin the immutable ShardSet instead.
+        self._write_lock = threading.RLock()
+        self._sample_ctr = itertools.count()
         self.skew_threshold = float(skew_threshold)
         self.pending_weight = float(pending_weight)
         self.auto_rebalance = bool(auto_rebalance)
@@ -322,40 +354,65 @@ class ShardedIndexService:
         """Current epoch per shard (independent streams)."""
         return [h.epoch for h in self._shard_set.handles]
 
-    def stats(self) -> list[ShardStats]:
-        """Per-shard observability sample: epoch, size, pending writes, the
-        routing cut and the installed snapshot's actual first key."""
+    def metrics(self) -> ServiceMetrics:
+        """The typed observability snapshot (:class:`repro.index.telemetry.
+        ServiceMetrics`): ShardSet version, served plan revision, rebalance
+        counters, current write-side imbalance, per-shape query counters
+        (``points`` covers ``lookup``/``point``, ``ranges`` counts scans,
+        ``counts`` counts bound pairs, ``searches`` the raw primitive -- for
+        checking a deployed ``FitSpec.range_fraction`` against reality), one
+        :class:`ShardMetrics` row per shard (epoch, size, pending writes,
+        routing cut, snapshot first key, write-side load) and -- when a
+        monitor is attached -- the measured per-tier cost profile."""
         ss = self._shard_set
-        out = []
+        loads = self.shard_loads()
+        with self._counts_lock:
+            counts = dict(self._query_counts)
+        shards = []
         for d, (handle, pend) in enumerate(zip(ss.handles, self._pending)):
             snap = handle.current()
             first = float(snap.table.keys[0]) if snap.n_keys else float("nan")
-            out.append(ShardStats(
+            shards.append(ShardMetrics(
                 shard=d, boundary=float(ss.boundaries[d]), epoch=snap.epoch,
                 n_segments=snap.table.n_segments, n_keys=snap.n_keys,
                 pending_inserts=pend, snapshot_first_key=first,
-                version=ss.version))
-        return out
+                load=float(loads[d]) if d < loads.size else 0.0))
+        return ServiceMetrics(
+            service="sharded", shard_set_version=ss.version,
+            plan_revision=self.plan.revision, n_shards=self.n_shards,
+            imbalance=self.imbalance(), rebalances=self._rebalances,
+            rebalance_skipped=self._rebalance_skipped,
+            last_rebalance=self._last_rebalance,
+            pending_inserts=self.pending_inserts, query_counts=counts,
+            shards=tuple(shards), tiers=tier_metrics(self.monitor))
+
+    def stats(self) -> list[ShardStats]:
+        """Deprecated: use :meth:`metrics`\\ ``().shards``.  Per-shard
+        observability sample in the legacy ``ShardStats`` shape."""
+        warnings.warn("ShardedIndexService.stats() is deprecated; use "
+                      "metrics().shards", DeprecationWarning, stacklevel=2)
+        m = self.metrics()
+        return [ShardStats(shard=s.shard, boundary=s.boundary, epoch=s.epoch,
+                           n_segments=s.n_segments, n_keys=s.n_keys,
+                           pending_inserts=s.pending_inserts,
+                           snapshot_first_key=s.snapshot_first_key,
+                           version=m.shard_set_version)
+                for s in m.shards]
 
     def service_stats(self) -> dict:
-        """Service-level observability: ShardSet version, rebalance counters
-        (completed / auto-skipped), the last rebalance summary, the current
-        write-side imbalance, and the per-shape query counters
-        (``query_counts``: queries served through each typed verb --
-        ``points`` covers ``lookup``/``point``, ``ranges`` counts scans,
-        ``counts`` counts bound pairs, ``searches`` direct calls to the raw
-        primitive -- for workload dashboards and for checking a deployed
-        ``FitSpec.range_fraction`` against reality)."""
-        with self._counts_lock:
-            counts = dict(self._query_counts)
-        return {"version": self._shard_set.version,
-                "n_shards": self.n_shards,
-                "imbalance": self.imbalance(),
-                "rebalances": self._rebalances,
-                "rebalance_skipped": self._rebalance_skipped,
-                "last_rebalance": self._last_rebalance,
-                "pending_inserts": self.pending_inserts,
-                "query_counts": counts}
+        """Deprecated: use :meth:`metrics`.  The legacy service-level dict,
+        derived field-for-field from the typed snapshot."""
+        warnings.warn("ShardedIndexService.service_stats() is deprecated; "
+                      "use metrics()", DeprecationWarning, stacklevel=2)
+        m = self.metrics()
+        return {"version": m.shard_set_version,
+                "n_shards": m.n_shards,
+                "imbalance": m.imbalance,
+                "rebalances": m.rebalances,
+                "rebalance_skipped": m.rebalance_skipped,
+                "last_rebalance": m.last_rebalance,
+                "pending_inserts": m.pending_inserts,
+                "query_counts": m.query_counts}
 
     def _count(self, shape: str, n: int) -> None:
         """Atomic query-counter bump (verbs run concurrently under the async
@@ -392,12 +449,13 @@ class ShardedIndexService:
             raise ValueError("service built without payloads (clustered "
                              "index); pass payload= at construction to store "
                              "values")
-        sid = self.shard_of(key)
-        self.writers[sid].insert(key, value)
-        self._pending[sid] += 1
-        if self.publish_every is not None and \
-                self.pending_inserts >= self.publish_every:
-            self.publish()
+        with self._write_lock:
+            sid = self.shard_of(key)
+            self.writers[sid].insert(key, value)
+            self._pending[sid] += 1
+            if self.publish_every is not None and \
+                    self.pending_inserts >= self.publish_every:
+                self.publish()
 
     def _shard_dirty(self, sid: int) -> bool:
         """Unpublished writes on shard ``sid``: service-routed inserts,
@@ -425,22 +483,40 @@ class ShardedIndexService:
         impossible (fewer distinct keys than shards) is skipped and counted
         in ``service_stats()['rebalance_skipped']``.
         """
-        ss = self._shard_set
-        targets = range(self.n_shards) if shards is None else shards
-        published: dict[int, Snapshot] = {}
-        for sid in targets:
-            if not force and not self._shard_dirty(sid):
-                continue
-            snap = self.publishers[sid].publish()
-            ss.handles[sid].install(snap)
-            self._pending[sid] = 0
-            published[sid] = snap
-        if self.auto_rebalance and published and self.needs_rebalance():
-            try:
-                self.rebalance()
-            except ValueError:       # < n_shards distinct keys: no safe recut
-                self._rebalance_skipped += 1
-        return published
+        with self._write_lock:
+            t0 = time.perf_counter_ns()
+            ss = self._shard_set
+            targets = range(self.n_shards) if shards is None else shards
+            published: dict[int, Snapshot] = {}
+            for sid in targets:
+                if not force and not self._shard_dirty(sid):
+                    continue
+                snap = self.publishers[sid].publish()
+                ss.handles[sid].install(snap)
+                self._pending[sid] = 0
+                published[sid] = snap
+            if self.auto_rebalance and published and self.needs_rebalance():
+                try:
+                    self.rebalance()
+                except ValueError:   # < n_shards distinct keys: no safe recut
+                    self._rebalance_skipped += 1
+            if published and self.monitor is not None:
+                self._record_publish(len(published),
+                                     time.perf_counter_ns() - t0)
+            return published
+
+    def _record_publish(self, n_published: int, wall_ns: int) -> None:
+        """Publish-cadence telemetry: duration, skew, per-shard load, and the
+        cumulative query-shape mix (the Replanner's range-fraction input)."""
+        mon = self.monitor
+        mon.record(CH_PUBLISH, n_published, wall_ns)
+        mon.record(CH_SKEW, self.imbalance())
+        for d, load in enumerate(self.shard_loads()):
+            mon.record(CH_SHARD_LOAD, d, float(load))
+        with self._counts_lock:
+            c = self._query_counts
+            mon.record(CH_QUERY_MIX, c["points"], c["ranges"], c["counts"],
+                       c["predecessors"], c["successors"], c["searches"])
 
     # ------------------------------------------------------------- rebalance
     def shard_loads(self) -> np.ndarray:
@@ -479,11 +555,16 @@ class ShardedIndexService:
         Returns a summary dict (also kept in ``service_stats()``):
         version, keys moved, and the imbalance before/after.
         """
+        with self._write_lock:
+            return self._rebalance_locked(force)
+
+    def _rebalance_locked(self, force: bool) -> dict | None:
         if self.n_shards == 1:
             return None
         before = self.imbalance()
         if not force and before <= self.skew_threshold:
             return None
+        t0 = time.perf_counter_ns()
         for w in self.writers:
             w.flush()
         merged = np.concatenate([w.as_table().keys for w in self.writers])
@@ -538,7 +619,115 @@ class ShardedIndexService:
         self._last_rebalance = {
             "version": self._shard_set.version, "moved_keys": moved,
             "imbalance_before": before, "imbalance_after": self.imbalance()}
+        if self.monitor is not None:
+            self.monitor.record(CH_REBALANCE, moved,
+                                time.perf_counter_ns() - t0)
         return self._last_rebalance
+
+    # ------------------------------------------------------------- replanning
+    def apply_plan(self, new_plan: "IndexPlan", *,
+                   reshard: bool = True) -> "IndexPlan":
+        """Hot-swap the served configuration to ``new_plan`` (a
+        ``plan.replace(...)`` revision -- the ``Replanner`` path, also usable
+        directly).  Never tears a reader: every path ends in a single
+        reference assignment of a fresh versioned :class:`ShardSet`, exactly
+        the rebalance discipline, so an in-flight lookup keeps serving its
+        pinned view.
+
+        Threshold/backend-only changes are *lightweight*: fresh serving
+        handles with the new engine opts (new dispatch cut-overs, new
+        monitor-threaded tiers) are installed over the **current snapshots**
+        -- no re-segmentation, no epoch reset.  A change to ``error`` /
+        ``buffer_size`` / (with ``reshard=True``) ``n_shards`` is
+        *structural*: writers are flushed, the merged key+payload view is
+        re-partitioned and re-segmented under the new knobs, and every shard
+        restarts its epoch stream at 1 (the shard count clamps to the
+        distinct-key count, like construction).  Returns the plan actually
+        served (``svc.plan``), which reflects any clamping."""
+        with self._write_lock:
+            # preserve caller-supplied engine opts, but let the new plan's
+            # dispatch thresholds win over the old plan's stale ones
+            base = {k: dict(v)
+                    for k, v in (self._engine_opts or {}).items()}
+            disp = base.get("dispatch")
+            if disp is not None:
+                for k in ("small_max", "large_min", "monitor"):
+                    disp.pop(k, None)
+            engine_opts = _inject_monitor(new_plan.merge_engine_opts(base),
+                                          self.monitor)
+            structural = (int(new_plan.error) != self.error
+                          or int(new_plan.buffer_size) != self.buffer_size
+                          or (reshard
+                              and int(new_plan.n_shards) != self.n_shards))
+            if structural:
+                new_plan = self._rebuild(new_plan, engine_opts, reshard)
+            else:
+                ss = self._shard_set
+                handles = tuple(ServingHandle(engine_opts)
+                                for _ in ss.handles)
+                for old, new in zip(ss.handles, handles):
+                    new.install(old.current())
+                self._shard_set = ShardSet(version=ss.version + 1,
+                                           boundaries=ss.boundaries,
+                                           handles=handles)
+                if new_plan.n_shards != self.n_shards:
+                    new_plan = dataclasses.replace(new_plan,
+                                                   n_shards=self.n_shards)
+            self.plan = new_plan
+            self.error = int(new_plan.error)
+            self.buffer_size = int(new_plan.buffer_size)
+            self.default_backend = new_plan.backend
+            self.publish_every = (new_plan.publish_every
+                                  if new_plan.buffer_size > 0 else None)
+            self._engine_opts = engine_opts
+            return self.plan
+
+    def _rebuild(self, new_plan: "IndexPlan", engine_opts: dict,
+                 reshard: bool) -> "IndexPlan":
+        """Structural re-open under the write lock: merge every writer's
+        current keys (+payloads), re-partition, re-segment with the new
+        error/buffer, publish epoch 1 everywhere, swap one fresh ShardSet."""
+        from repro.core.tree import FITingTree
+        for w in self.writers:
+            w.flush()
+        keys = np.concatenate([w.as_table().keys for w in self.writers])
+        payload = (np.concatenate([w.payload_column()
+                                   for w in self.writers])
+                   if self.has_payload else None)
+        n_shards = int(new_plan.n_shards) if reshard else self.n_shards
+        if keys.size == 0:
+            n_shards = 1
+        elif n_shards > 1:           # same clamp as shard_partition's safety
+            distinct = 1 + int(np.count_nonzero(np.diff(keys) != 0))
+            n_shards = max(1, min(n_shards, distinct))
+        error = int(new_plan.error)
+        buffer_size = int(new_plan.buffer_size)
+        bounds, splits = shard_partition(keys, n_shards)
+        offsets = np.concatenate(
+            [[0], np.cumsum([s.shape[0] for s in splits])[:-1]]
+        ).astype(np.int64)
+        writers = [
+            FITingTree(split, error=error, buffer_size=buffer_size,
+                       mode=self._mode,
+                       payload=(None if payload is None else
+                                payload[offsets[d]:offsets[d]
+                                        + split.shape[0]]),
+                       assume_sorted=True)
+            for d, split in enumerate(splits)]
+        publishers = [SnapshotPublisher(t) for t in writers]
+        handles = tuple(ServingHandle(engine_opts) for _ in writers)
+        for pub, handle in zip(publishers, handles):
+            handle.install(pub.publish())     # epoch 1 everywhere (restart)
+        version = self._shard_set.version + 1
+        self.writers = writers
+        self.publishers = publishers
+        self._pending = [0] * n_shards
+        # the swap: readers pin either the old complete view or this one
+        self._shard_set = ShardSet(version=version, boundaries=bounds,
+                                   handles=handles)
+        if n_shards != new_plan.n_shards:
+            new_plan = dataclasses.replace(new_plan, n_shards=n_shards)
+        return new_plan
 
     # -------------------------------------------------------------- read path
     def lookup(self, queries, backend: str | None = None) -> np.ndarray:
@@ -555,6 +744,7 @@ class ShardedIndexService:
         the first call)."""
         backend = backend or self.default_backend
         self._count("points", int(np.size(queries)))
+        self._sample_keys(queries)
         ss = self._shard_set                        # pin the routing view
         if len(ss.handles) == 1:                    # the IndexService path
             return ss.handles[0].lookup(queries, backend)
@@ -608,7 +798,17 @@ class ShardedIndexService:
         across the current shard snapshots (the query plane's primitive)."""
         check_side(side)
         self._count("searches", int(np.size(queries)))
+        self._sample_keys(queries)
         return self._search_view(self._pin_view(backend), queries, side)
+
+    def _sample_keys(self, queries) -> None:
+        """Contribute every ``_KEY_SAMPLE_EVERY``-th call's leading queries
+        to the served-keys reservoir -- the Replanner's re-plan key set.  One
+        attribute read + None check when no monitor is attached."""
+        mon = self.monitor
+        if mon is not None and next(self._sample_ctr) % _KEY_SAMPLE_EVERY == 0:
+            q = np.asarray(queries, np.float64).ravel()
+            mon.record_many(CH_SERVED_KEYS, q[:_KEY_SAMPLE_WIDTH])
 
     def point(self, queries, backend: str | None = None) -> PointResult:
         """Typed membership: global leftmost rank + found flag per query."""

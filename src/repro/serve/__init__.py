@@ -8,10 +8,13 @@ from repro.index.pipeline import (AsyncIndexService, PipelineClosed,
                                   PipelineOverloaded, open_pipeline)
 from repro.index.query import PointResult, RangeResult
 from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
+from repro.index.telemetry import (MetricsSnapshot, Monitor, Replanner,
+                                   ServiceMetrics)
 
 from .index_service import IndexService
 
 __all__ = ["AsyncIndexService", "FitSpec", "IndexPlan", "IndexService",
-           "PipelineClosed", "PipelineOverloaded", "PointResult",
-           "RangeResult", "ShardSet", "ShardedIndexService", "ShardStats",
+           "MetricsSnapshot", "Monitor", "PipelineClosed",
+           "PipelineOverloaded", "PointResult", "RangeResult", "Replanner",
+           "ServiceMetrics", "ShardSet", "ShardedIndexService", "ShardStats",
            "open_index", "open_pipeline"]

@@ -56,7 +56,8 @@ class IndexService:
                  skew_threshold: float = 2.0,
                  pending_weight: float = 1.0,
                  auto_rebalance: bool = False,
-                 assume_sorted: bool = False):
+                 assume_sorted: bool = False,
+                 monitor=None):
         n_shards = None
         if plan is None:
             n_shards = 1
@@ -70,7 +71,7 @@ class IndexService:
             backend=backend, engine_opts=engine_opts,
             publish_every=publish_every, skew_threshold=skew_threshold,
             pending_weight=pending_weight, auto_rebalance=auto_rebalance,
-            assume_sorted=assume_sorted)
+            assume_sorted=assume_sorted, monitor=monitor)
 
     @classmethod
     def from_plan(cls, keys: np.ndarray, plan: IndexPlan, *,
@@ -167,8 +168,28 @@ class IndexService:
         skips the lazy plan/compile latency spike."""
         self._sharded.prewarm(backend, batch_sizes=batch_sizes)
 
+    @property
+    def monitor(self):
+        """The attached telemetry monitor (None when telemetry is off)."""
+        return self._sharded.monitor
+
+    def apply_plan(self, new_plan: "IndexPlan", *,
+                   reshard: bool = True) -> "IndexPlan":
+        """Hot-swap the served configuration (the ``Replanner`` path); the
+        shard count stays 1 through this facade.  See
+        ``ShardedIndexService.apply_plan``."""
+        if new_plan.n_shards != 1:
+            new_plan = dataclasses.replace(new_plan, n_shards=1)
+        return self._sharded.apply_plan(new_plan, reshard=reshard)
+
+    def metrics(self):
+        """The typed observability snapshot (``MetricsSnapshot``); see
+        ``ShardedIndexService.metrics``."""
+        return dataclasses.replace(self._sharded.metrics(), service="index")
+
     def service_stats(self) -> dict:
-        """Service-level observability incl. the per-shape query counters."""
+        """Deprecated: use :meth:`metrics`.  Service-level observability
+        incl. the per-shape query counters."""
         return self._sharded.service_stats()
 
     @property

@@ -8,7 +8,7 @@ import pytest
 
 LAZY_SETS = {
     "repro.index": ["_ENGINE_NAMES", "_SNAPSHOT_NAMES", "_SHARDED_NAMES",
-                    "_FIT_NAMES", "_PIPELINE_NAMES"],
+                    "_FIT_NAMES", "_PIPELINE_NAMES", "_TELEMETRY_NAMES"],
     "repro.core": ["_JAX_INDEX_NAMES"],
 }
 
@@ -18,6 +18,7 @@ LAZY_HOMES = {  # lazy-set name -> submodule that must define those names
     "_SHARDED_NAMES": "repro.index.sharded",
     "_FIT_NAMES": "repro.index.fit",
     "_PIPELINE_NAMES": "repro.index.pipeline",
+    "_TELEMETRY_NAMES": "repro.index.telemetry",
     "_JAX_INDEX_NAMES": "repro.core.jax_index",
 }
 
@@ -90,6 +91,31 @@ def test_query_verbs_on_every_backend_and_serving_layer():
         missing = [v for v in QUERY_VERBS if not callable(getattr(layer, v,
                                                                   None))]
         assert not missing, f"{type(layer).__name__} lacks verbs {missing}"
+
+
+def test_metrics_surface_on_every_serving_layer():
+    # the unified typed observability surface: metrics() everywhere, JSON
+    # round-trip, and the legacy dict surfaces kept as deprecated wrappers
+    import numpy as np
+
+    import repro.index as ri
+    from repro.serve import IndexService, Monitor
+
+    keys = np.arange(256, dtype=np.float64)
+    svc = IndexService(keys, error=8, monitor=Monitor())
+    sharded = ri.ShardedIndexService(keys, error=8, n_shards=2,
+                                     assume_sorted=True)
+    for layer in (svc, sharded):
+        m = layer.metrics()
+        assert isinstance(m, ri.ServiceMetrics)
+        assert m.schema_version == 1
+        assert m.plan_revision == layer.plan.revision == 0
+        assert len(m.shards) == m.n_shards
+        assert ri.ServiceMetrics.from_json(m.to_json()) == m
+    with pytest.warns(DeprecationWarning):
+        sharded.service_stats()
+    with pytest.warns(DeprecationWarning):
+        sharded.stats()
 
 
 def test_query_result_types_exported_everywhere():
