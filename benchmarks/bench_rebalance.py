@@ -91,25 +91,25 @@ def run(n: int = N, n_inserts: int = N_INSERTS, n_queries: int = NQ,
         t = timeit(svc.lookup, q)
         qps = n_queries / t
         loads = svc.shard_loads()
-        stats = svc.service_stats()
+        m = svc.metrics()
         results[f"rebalance_{mode}"] = {
             "publish_ms_mean": float(np.mean(publish_ms)),
             "publish_ms_p95": _percentile(publish_ms, 95),
             "publish_ms_max": float(np.max(publish_ms)),
             "publishes": len(publish_ms),
-            "rebalances": stats["rebalances"],
+            "rebalances": m.rebalances,
             "rebalance_ms_total": float(np.sum(rebalance_ms)),
             "queries_per_s": qps,
             "ns_per_query": t / n_queries * 1e9,
-            "imbalance": stats["imbalance"],
+            "imbalance": m.imbalance,
             "max_keys_per_shard": int(loads.max()),
             "mean_keys_per_shard": float(loads.mean()),
-            "shard_set_version": stats["version"],
+            "shard_set_version": m.shard_set_version,
         }
         emit("rebalance", f"qps_{mode}", qps, f"backend={backend}")
         emit("rebalance", f"publish_ms_mean_{mode}",
              results[f"rebalance_{mode}"]["publish_ms_mean"])
-        emit("rebalance", f"imbalance_{mode}", stats["imbalance"])
+        emit("rebalance", f"imbalance_{mode}", m.imbalance)
     write_json("bench_rebalance", results)
     return results
 

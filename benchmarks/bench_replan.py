@@ -90,6 +90,10 @@ def _overhead_check(keys, q):
     jitter and GC interplay swing end-to-end timings by several percent,
     an order more than the hook), and the median across round ratios shrugs
     off the occasional scheduler spike landing in one accumulator."""
+    from repro.analysis import sanitizer
+    assert not sanitizer.enabled(), \
+        "run benchmarks with REPRO_SANITIZE=0: the runtime sanitizer's " \
+        "pin/lock tracking would be charged against the 5% telemetry budget"
     batch = q[:OVERHEAD_BATCH]
     mon = Monitor()
     p = plan(keys, FitSpec(error=64, batch_sizes=(1, 256, 4096)),

@@ -191,15 +191,15 @@ def run(n: int = N, error: int = ERROR, n_requests: int = N_REQUESTS,
             with AsyncIndexService(svc, flush_threshold=flush_threshold,
                                    max_wait_us=wait, prewarm=False) as pipe:
                 qps_on, lat_on, res_on = _drive_pipeline(pipe, queries, sched)
-                stats = pipe.pipeline_stats()
+                pm = pipe.metrics().pipeline
             assert _check_oracle(res_on, oracle), "coalesced drive diverged"
             row = {"rate_factor": factor, "arrival_qps": rate,
                    "mode": "coalesce", "max_wait_us": wait, "qps": qps_on,
                    "oracle_exact": True, **_percentiles(lat_on),
-                   "flushes": stats["flushes"],
-                   "threshold_flushes": stats["threshold_flushes"],
-                   "deadline_flushes": stats["deadline_flushes"],
-                   "max_fused_batch": stats["max_fused_batch"]}
+                   "flushes": pm.flushes,
+                   "threshold_flushes": pm.threshold_flushes,
+                   "deadline_flushes": pm.deadline_flushes,
+                   "max_fused_batch": pm.max_fused_batch}
             sweep.append(row)
             emit("serving", f"qps_on_{factor:g}x_wait{wait:g}us", qps_on,
                  f"p99_us={row['p99_us']:.0f}")

@@ -90,6 +90,13 @@ Rebalancing knobs (shard boundaries are NOT frozen at construction):
     ``ShardSet``, so concurrent lookups never mix old routing with new
     offsets.  ``service_stats()`` exposes the version + rebalance counters.
 
+The concurrency contracts behind all of this (immutable published
+snapshots, read-once pinning of the ``ShardSet``, one global lock order)
+are written down in ``docs/INVARIANTS.md`` and mechanically enforced:
+``python -m repro.analysis src/ --strict`` checks the source statically,
+and running any of this with ``REPRO_SANITIZE=1`` turns on the runtime
+sanitizer (frozen served arrays, pin tracking, lock-order watchdog).
+
 Backend-dispatch knobs (``backend="dispatch"``, see
 ``repro.index.engine.DispatchEngine``):
   * ``small_max`` -- batches up to this size stay on the host (``numpy``):

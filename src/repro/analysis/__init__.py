@@ -1,0 +1,39 @@
+"""Static invariant analyzer + runtime concurrency sanitizer.
+
+Module map (see ROADMAP.md and docs/INVARIANTS.md):
+  contracts.py  -- the machine-readable contract declarations (frozen
+                   classes, pinned fields, host-only modules, hot-path
+                   marker, the global LOCK_ORDER) shared by both layers
+  invariants.py -- AST static checker, rules RI001-RI007 with
+                   ``# repro: allow[RULE]`` suppression
+  cli.py        -- ``python -m repro.analysis src/ [--strict]``
+  sanitizer.py  -- opt-in runtime layer (``REPRO_SANITIZE=1``):
+                   freeze-on-publish helpers, the per-verb ``PinTracker``,
+                   and the lock-order watchdog behind ``make_lock``
+
+``contracts`` and ``sanitizer`` are import-light (pure stdlib) so the
+serving modules can depend on them without cost; the checker is only
+imported by the CLI and tests.  Names below resolve lazily (PEP 562).
+"""
+_CONTRACT_NAMES = {"FROZEN_CLASSES", "HOST_ONLY_MODULES", "LOCK_ORDER",
+                   "LOCK_RANK", "hot_path"}
+_INVARIANT_NAMES = {"Analyzer", "RULES", "Violation", "check_source"}
+_SANITIZER_NAMES = {"LockOrderError", "PinViolation", "enabled", "freeze",
+                    "lock_graph_edges", "make_lock", "make_rlock",
+                    "observe_pin", "pin_scope", "published_array",
+                    "set_enabled"}
+
+__all__ = sorted(_CONTRACT_NAMES | _INVARIANT_NAMES | _SANITIZER_NAMES)
+
+
+def __getattr__(name):
+    if name in _CONTRACT_NAMES:
+        from . import contracts
+        return getattr(contracts, name)
+    if name in _INVARIANT_NAMES:
+        from . import invariants
+        return getattr(invariants, name)
+    if name in _SANITIZER_NAMES:
+        from . import sanitizer
+        return getattr(sanitizer, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -29,13 +29,15 @@ can differ in membership across that boundary.  ``DeviceIndex`` is the f32 devic
 from __future__ import annotations
 
 import functools
-import threading
 import time
 from typing import Callable, Literal, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis.contracts import hot_path
+from repro.analysis.sanitizer import make_lock
 
 from .query import QueryVerbs
 from .table import SegmentTable, numpy_lookup, numpy_search
@@ -415,7 +417,7 @@ class _DeviceEngine(QueryVerbs):
         self.table = table
         self.index = device_index(table)
         self._search_fns: dict[str, Callable] = {}
-        self._search_lock = threading.Lock()
+        self._search_lock = make_lock("_DeviceEngine._search_lock")
 
     def lookup(self, queries) -> np.ndarray:
         if self.table.n_keys == 0:   # gathers on a 0-length device array are
@@ -545,7 +547,7 @@ class DispatchEngine(QueryVerbs):
         self.monitor = monitor
         self._engine_opts = engine_opts or {}
         self._engines: dict[str, LookupEngine] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("DispatchEngine._lock")
 
     def tier_for(self, batch_size: int) -> str:
         """The tier (``small``/``medium``/``large``) a batch routes to."""
@@ -571,6 +573,7 @@ class DispatchEngine(QueryVerbs):
                     self._engines[name] = eng
         return eng
 
+    @hot_path
     def lookup(self, queries) -> np.ndarray:
         n = int(np.size(queries))
         eng = self.engine_for(n)
@@ -583,6 +586,7 @@ class DispatchEngine(QueryVerbs):
         mon.record("tier." + self.tier_for(n), n, time.perf_counter_ns() - t0)
         return out
 
+    @hot_path
     def search(self, queries, side: str = "left") -> np.ndarray:
         """The query plane's primitive, routed by batch size exactly like
         ``lookup`` (every tier returns identical insertion ranks for exact-f32

@@ -72,6 +72,8 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
+from repro.analysis.sanitizer import make_lock
+
 from .telemetry import (CH_FLUSH, CH_QUEUE_DEPTH, CH_SOJOURN, FLUSH_DEADLINE,
                         FLUSH_DRAIN, FLUSH_INLINE, FLUSH_THRESHOLD, Monitor,
                         PipelineMetrics, Replanner, ServiceMetrics)
@@ -201,7 +203,7 @@ class AsyncIndexService:
         # ("lookup" and each ("search", side) fuse separately -- a fused call
         # must be one service call).  All mutations under _lock; _space wakes
         # blocked submitters, _work wakes the flusher.
-        self._lock = threading.Lock()
+        self._lock = make_lock("AsyncIndexService._lock")
         self._space = threading.Condition(self._lock)
         self._work = threading.Condition(self._lock)
         self._buckets: dict[tuple, list[_Request]] = {}

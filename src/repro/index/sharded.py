@@ -51,13 +51,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import threading
 import time
 import warnings
 from typing import TYPE_CHECKING, NamedTuple, Sequence
 
 import numpy as np
 
+from repro.analysis import sanitizer
+from repro.analysis.contracts import hot_path
 from repro.index.table import (SegmentTable, route_keys, shard_boundaries,
                                shard_partition)
 
@@ -133,7 +134,12 @@ def pack_shard_tables(tables: Sequence[SegmentTable]) -> PackedShardTables:
     for i in range(d - 2, -1, -1):      # backfill empty interior boundaries
         if tables[i].n_keys == 0:
             boundaries[i] = boundaries[i + 1]
-    return PackedShardTables(seg_start, slope, base, seg_end, boundaries, s_max)
+    # the packed form is a published view shared across device bridges:
+    # freeze it like any snapshot so in-place edits raise at the write site
+    return PackedShardTables(
+        sanitizer.published_array(seg_start), sanitizer.published_array(slope),
+        sanitizer.published_array(base), sanitizer.published_array(seg_end),
+        sanitizer.published_array(boundaries), s_max)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +157,12 @@ class ShardSet:
     version: int
     boundaries: np.ndarray               # (D,) f64 router cuts
     handles: tuple[ServingHandle, ...]   # one per shard, same order
+
+    def __post_init__(self):
+        # published = immutable: a reader that pinned this set must never see
+        # its routing column change underneath it (freeze copies scratch views)
+        object.__setattr__(self, "boundaries",
+                           sanitizer.published_array(self.boundaries))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -275,7 +287,8 @@ class ShardedIndexService:
         # re-entrant because insert -> publish -> rebalance nests, and a
         # Replanner swap may land while a cadence publish holds the lock.
         # Readers never take it: they pin the immutable ShardSet instead.
-        self._write_lock = threading.RLock()
+        self._write_lock = sanitizer.make_rlock(
+            "ShardedIndexService._write_lock")
         self._sample_ctr = itertools.count()
         self.skew_threshold = float(skew_threshold)
         self.pending_weight = float(pending_weight)
@@ -289,7 +302,8 @@ class ShardedIndexService:
         # lock: dict `+=` is a read-modify-write, and the async front door
         # (repro.index.pipeline) drives these verbs from many threads --
         # unlocked increments lose updates under that concurrency.
-        self._counts_lock = threading.Lock()
+        self._counts_lock = sanitizer.make_lock(
+            "ShardedIndexService._counts_lock")
         self._query_counts = {"points": 0, "ranges": 0, "counts": 0,
                               "predecessors": 0, "successors": 0,
                               "searches": 0}
@@ -322,6 +336,15 @@ class ShardedIndexService:
         return cls(keys, plan=plan, payload=payload, **service_kwargs)
 
     # ------------------------------------------------------------------ shape
+    def _pin_shard_set(self) -> ShardSet:
+        """THE read-path pin: one reference read of the live routing view.
+        Every query verb goes through here exactly once per operation (RI002)
+        and reports the pinned version to the sanitizer's PinTracker, which
+        asserts no verb mixes two ShardSet versions end-to-end."""
+        ss = self._shard_set
+        sanitizer.observe_pin(ss.version)
+        return ss
+
     @property
     def n_shards(self) -> int:
         return len(self.writers)
@@ -513,10 +536,14 @@ class ShardedIndexService:
         mon.record(CH_SKEW, self.imbalance())
         for d, load in enumerate(self.shard_loads()):
             mon.record(CH_SHARD_LOAD, d, float(load))
+        # copy under the lock, record after releasing it: Monitor.record
+        # takes Monitor._make_lock, which ranks *above* _counts_lock in
+        # contracts.LOCK_ORDER -- recording while holding the counter lock
+        # is exactly the inversion the runtime watchdog exists to catch
         with self._counts_lock:
-            c = self._query_counts
-            mon.record(CH_QUERY_MIX, c["points"], c["ranges"], c["counts"],
-                       c["predecessors"], c["successors"], c["searches"])
+            c = dict(self._query_counts)
+        mon.record(CH_QUERY_MIX, c["points"], c["ranges"], c["counts"],
+                   c["predecessors"], c["successors"], c["searches"])
 
     # ------------------------------------------------------------- rebalance
     def shard_loads(self) -> np.ndarray:
@@ -565,11 +592,12 @@ class ShardedIndexService:
         if not force and before <= self.skew_threshold:
             return None
         t0 = time.perf_counter_ns()
+        ss = self._shard_set    # one pinned read, reused through the swap
         for w in self.writers:
             w.flush()
         merged = np.concatenate([w.as_table().keys for w in self.writers])
         new_bounds = shard_boundaries(merged, self.n_shards)
-        if not force and np.array_equal(new_bounds, self._shard_set.boundaries):
+        if not force and np.array_equal(new_bounds, ss.boundaries):
             # the recut cannot help (duplicate-snapped cuts already match the
             # current ones): nothing would move, so skip the churn of
             # republishing every shard; counted for observability
@@ -605,19 +633,18 @@ class ShardedIndexService:
             self.writers[t].splice_run(run[order],
                                        None if pl is None else pl[order])
 
-        ss = self._shard_set
         new_handles = tuple(ServingHandle(self._engine_opts)
                             for _ in self.writers)
         for pub, handle in zip(self.publishers, new_handles):
             handle.install(pub.publish())
+        new_set = ShardSet(version=ss.version + 1, boundaries=new_bounds,
+                           handles=new_handles)
         # the swap: one reference assignment publishes boundaries + handles
-        self._shard_set = ShardSet(version=ss.version + 1,
-                                   boundaries=new_bounds,
-                                   handles=new_handles)
+        self._shard_set = new_set
         self._pending = [0] * n
         self._rebalances += 1
         self._last_rebalance = {
-            "version": self._shard_set.version, "moved_keys": moved,
+            "version": new_set.version, "moved_keys": moved,
             "imbalance_before": before, "imbalance_after": self.imbalance()}
         if self.monitor is not None:
             self.monitor.record(CH_REBALANCE, moved,
@@ -745,20 +772,22 @@ class ShardedIndexService:
         backend = backend or self.default_backend
         self._count("points", int(np.size(queries)))
         self._sample_keys(queries)
-        ss = self._shard_set                        # pin the routing view
-        if len(ss.handles) == 1:                    # the IndexService path
-            return ss.handles[0].lookup(queries, backend)
-        engines = [h.engine(backend) for h in ss.handles]
-        q = np.asarray(queries, np.float64)
-        sid = route_keys(ss.boundaries, q)
-        sizes = [e.table.n_keys for e in engines]
-        offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]]).astype(np.int64)
-        out = np.full(q.shape, -1, np.int64)
-        for d in np.unique(sid):
-            mask = sid == d
-            local = np.asarray(engines[d].lookup(q[mask]), np.int64)
-            out[mask] = np.where(local >= 0, local + offsets[d], -1)
-        return out
+        with sanitizer.pin_scope("lookup"):
+            ss = self._pin_shard_set()              # pin the routing view
+            if len(ss.handles) == 1:                # the IndexService path
+                return ss.handles[0].lookup(queries, backend)
+            engines = [h.engine(backend) for h in ss.handles]
+            q = np.asarray(queries, np.float64)
+            sid = route_keys(ss.boundaries, q)
+            sizes = [e.table.n_keys for e in engines]
+            offsets = np.concatenate([[0],
+                                      np.cumsum(sizes)[:-1]]).astype(np.int64)
+            out = np.full(q.shape, -1, np.int64)
+            for d in np.unique(sid):
+                mask = sid == d
+                local = np.asarray(engines[d].lookup(q[mask]), np.int64)
+                out[mask] = np.where(local >= 0, local + offsets[d], -1)
+            return out
 
     # ------------------------------------------------------ typed query plane
     def _pin_view(self, backend: str | None):
@@ -768,7 +797,7 @@ class ShardedIndexService:
         come from a single epoch combination -- a concurrent publish or
         rebalance can never tear a scan that already pinned its view."""
         backend = backend or self.default_backend
-        ss = self._shard_set
+        ss = self._pin_shard_set()
         states = [h._pin() for h in ss.handles]
         engines = [h._engine_from(st, backend)
                    for h, st in zip(ss.handles, states)]
@@ -799,8 +828,10 @@ class ShardedIndexService:
         check_side(side)
         self._count("searches", int(np.size(queries)))
         self._sample_keys(queries)
-        return self._search_view(self._pin_view(backend), queries, side)
+        with sanitizer.pin_scope("search"):
+            return self._search_view(self._pin_view(backend), queries, side)
 
+    @hot_path
     def _sample_keys(self, queries) -> None:
         """Contribute every ``_KEY_SAMPLE_EVERY``-th call's leading queries
         to the served-keys reservoir -- the Replanner's re-plan key set.  One
@@ -812,31 +843,33 @@ class ShardedIndexService:
 
     def point(self, queries, backend: str | None = None) -> PointResult:
         """Typed membership: global leftmost rank + found flag per query."""
-        view = self._pin_view(backend)
-        _, _, engines, offsets, _ = view
-        ss = view[0]
-        q = np.asarray(queries, np.float64)
-        self._count("points", int(q.size))
-        sid = route_keys(ss.boundaries, q)
-        rank = np.full(q.shape, -1, np.int64)
-        found = np.zeros(q.shape, bool)
-        for d in np.unique(sid):
-            mask = sid == d
-            res = engines[d].point(q[mask])
-            found[mask] = res.found
-            rank[mask] = np.where(res.found, res.rank + offsets[d], -1)
-        return PointResult(rank=rank, found=found)
+        with sanitizer.pin_scope("point"):
+            view = self._pin_view(backend)
+            _, _, engines, offsets, _ = view
+            ss = view[0]
+            q = np.asarray(queries, np.float64)
+            self._count("points", int(q.size))
+            sid = route_keys(ss.boundaries, q)
+            rank = np.full(q.shape, -1, np.int64)
+            found = np.zeros(q.shape, bool)
+            for d in np.unique(sid):
+                mask = sid == d
+                res = engines[d].point(q[mask])
+                found[mask] = res.found
+                rank[mask] = np.where(res.found, res.rank + offsets[d], -1)
+            return PointResult(rank=rank, found=found)
 
     def count(self, lo, hi, backend: str | None = None) -> np.ndarray:
         """Keys in the inclusive ``[lo, hi]`` ranges (vectorized), resolved
         against one pinned view so both bounds see the same epochs."""
-        view = self._pin_view(backend)
-        lo = np.asarray(lo, np.float64)
-        hi = np.asarray(hi, np.float64)
-        counts = np.maximum(self._search_view(view, hi, "right")
-                            - self._search_view(view, lo, "left"), 0)
-        self._count("counts", int(counts.size))
-        return counts.astype(np.int64)
+        with sanitizer.pin_scope("count"):
+            view = self._pin_view(backend)
+            lo = np.asarray(lo, np.float64)
+            hi = np.asarray(hi, np.float64)
+            counts = np.maximum(self._search_view(view, hi, "right")
+                                - self._search_view(view, lo, "left"), 0)
+            self._count("counts", int(counts.size))
+            return counts.astype(np.int64)
 
     def range(self, lo, hi, *, materialize: bool = True,
               backend: str | None = None) -> RangeResult:
@@ -847,6 +880,12 @@ class ShardedIndexService:
         concatenate in shard order -- all against the one pinned ShardSet,
         so a concurrent rebalance never tears the scan."""
         lo, hi = check_range(lo, hi)
+        with sanitizer.pin_scope("range"):
+            return self._range_pinned(lo, hi, materialize=materialize,
+                                      backend=backend)
+
+    def _range_pinned(self, lo, hi, *, materialize: bool,
+                      backend: str | None) -> RangeResult:
         view = self._pin_view(backend)
         ss, snaps, engines, offsets, _ = view
         self._count("ranges", 1)
@@ -878,19 +917,21 @@ class ShardedIndexService:
     def predecessor(self, queries, backend: str | None = None) -> PointResult:
         """Global rank of the largest key <= each query (rightmost
         occurrence), found=False where every key is above the query."""
-        view = self._pin_view(backend)
-        q = np.asarray(queries, np.float64)
-        self._count("predecessors", int(q.size))
-        rank = self._search_view(view, q, "right") - 1
-        found = rank >= 0
-        return PointResult(rank=np.where(found, rank, -1), found=found)
+        with sanitizer.pin_scope("predecessor"):
+            view = self._pin_view(backend)
+            q = np.asarray(queries, np.float64)
+            self._count("predecessors", int(q.size))
+            rank = self._search_view(view, q, "right") - 1
+            found = rank >= 0
+            return PointResult(rank=np.where(found, rank, -1), found=found)
 
     def successor(self, queries, backend: str | None = None) -> PointResult:
         """Global rank of the smallest key >= each query (leftmost
         occurrence), found=False where every key is below the query."""
-        view = self._pin_view(backend)
-        q = np.asarray(queries, np.float64)
-        self._count("successors", int(q.size))
-        rank = self._search_view(view, q, "left")
-        found = rank < view[4]
-        return PointResult(rank=np.where(found, rank, -1), found=found)
+        with sanitizer.pin_scope("successor"):
+            view = self._pin_view(backend)
+            q = np.asarray(queries, np.float64)
+            self._count("successors", int(q.size))
+            rank = self._search_view(view, q, "left")
+            found = rank < view[4]
+            return PointResult(rank=np.where(found, rank, -1), found=found)

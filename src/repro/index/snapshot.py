@@ -22,10 +22,11 @@ view (epoch semantics, no torn reads, no reader locks).
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import TYPE_CHECKING
 
 import numpy as np
+
+from repro.analysis.sanitizer import make_lock, published_array
 
 from .engine import LookupEngine, make_engine
 from .query import PointResult, RangeResult
@@ -78,8 +79,11 @@ class SnapshotPublisher:
         n_refit = self.tree.flush()
         self._epoch += 1
         table = self.tree.as_table(epoch=self._epoch)
+        # freeze-on-publish: the payload column escapes into serving threads
+        # with the table (whose arrays freeze at construction) -- a latent
+        # in-place write through either must raise, not corrupt the epoch
         return Snapshot(table=table, epoch=self._epoch, n_refit=n_refit,
-                        payload=self.tree.payload_column())
+                        payload=published_array(self.tree.payload_column()))
 
 
 class ServingHandle:
@@ -92,7 +96,7 @@ class ServingHandle:
 
     def __init__(self, engine_opts: dict[str, dict] | None = None):
         self._engine_opts = engine_opts or {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("ServingHandle._lock")
         self._state: tuple[Snapshot, dict[str, LookupEngine]] | None = None
 
     @property

@@ -27,6 +27,8 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
+from repro.analysis.sanitizer import published_array
+
 if TYPE_CHECKING:  # avoid a module-level cycle with repro.core
     from repro.core.segmentation import Mode, Segments
 
@@ -60,6 +62,15 @@ class SegmentTable:
     keys: np.ndarray       # (N,) f64  the sorted key column
     error: int
     epoch: int = 0
+
+    def __post_init__(self):
+        # enforce the class contract at construction, not just by convention:
+        # every array a reader can reach through a table is non-writeable, so
+        # a latent in-place mutation raises ValueError at the write site.
+        # Views of caller-writeable scratch buffers are copied first (freezing
+        # only the view would leave the base writable -- and alias it).
+        for name in ("start_key", "slope", "base", "seg_end", "keys"):
+            object.__setattr__(self, name, published_array(getattr(self, name)))
 
     # ----------------------------------------------------------- construction
     @classmethod

@@ -51,11 +51,12 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
-import threading
 import time
 
 import numpy as np
 
+from repro.analysis.contracts import hot_path
+from repro.analysis.sanitizer import make_lock
 from repro.core.cost_model import (CostParams, TPUCostParams, curve_crossings,
                                    fit_tier_curves, refit_params,
                                    tier_cost_curves)
@@ -110,6 +111,7 @@ class _Ring:
         self.total = 0          # rows ever appended (monotonic, approximate
         #                         under racing appends -- telemetry-grade)
 
+    @hot_path
     def append(self, row) -> None:
         i = next(self._ctr)
         self.rows[i % self.capacity] = row
@@ -169,7 +171,7 @@ class JSONLBackend(MemoryBackend):
         self.path = str(path)
         self.dropped = 0
         self._flushed: dict[str, int] = {}
-        self._io_lock = threading.Lock()
+        self._io_lock = make_lock("JSONLBackend._io_lock")
 
     def flush(self, channels: dict[str, _Ring]) -> int:
         written = 0
@@ -223,9 +225,10 @@ class Monitor:
         self.backend = backend
         self.enabled = True
         self._channels: dict[str, _Ring] = {}
-        self._make_lock = threading.Lock()
+        self._make_lock = make_lock("Monitor._make_lock")
 
     # ------------------------------------------------------------- hot path
+    @hot_path
     def record(self, name: str, *values) -> None:
         """Append one scalar row to ``name`` (width fixed by first record)."""
         if not self.enabled:
@@ -235,6 +238,7 @@ class Monitor:
             ring = self._make(name, "scalar")
         ring.append(values)
 
+    @hot_path
     def record_many(self, name: str, values) -> None:
         """Append one array row (a *sample*, e.g. served keys) to ``name``."""
         if not self.enabled:

@@ -24,12 +24,13 @@ directly when write skew matters.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import TYPE_CHECKING
 
 import numpy as np
 
 from repro.index.query import PointResult, RangeResult
-from repro.index.sharded import ShardedIndexService
+from repro.index.sharded import ShardedIndexService, ShardStats
 from repro.index.snapshot import Snapshot
 
 if TYPE_CHECKING:  # runtime import is lazy (fit builds services via plans)
@@ -189,8 +190,19 @@ class IndexService:
 
     def service_stats(self) -> dict:
         """Deprecated: use :meth:`metrics`.  Service-level observability
-        incl. the per-shape query counters."""
-        return self._sharded.service_stats()
+        incl. the per-shape query counters, derived field-for-field from the
+        typed snapshot (RI006: no internal deprecated-surface calls)."""
+        warnings.warn("IndexService.service_stats() is deprecated; use "
+                      "metrics()", DeprecationWarning, stacklevel=2)
+        m = self.metrics()
+        return {"version": m.shard_set_version,
+                "n_shards": m.n_shards,
+                "imbalance": m.imbalance,
+                "rebalances": m.rebalances,
+                "rebalance_skipped": m.rebalance_skipped,
+                "last_rebalance": m.last_rebalance,
+                "pending_inserts": m.pending_inserts,
+                "query_counts": m.query_counts}
 
     @property
     def epoch(self) -> int:
@@ -202,5 +214,14 @@ class IndexService:
         return self._sharded.pending_inserts
 
     def stats(self):
-        """The single shard's observability sample (see ShardStats)."""
-        return self._sharded.stats()
+        """Deprecated: use :meth:`metrics`\\ ``().shards``.  The single
+        shard's observability sample in the legacy ``ShardStats`` shape."""
+        warnings.warn("IndexService.stats() is deprecated; use "
+                      "metrics().shards", DeprecationWarning, stacklevel=2)
+        m = self.metrics()
+        return [ShardStats(shard=s.shard, boundary=s.boundary, epoch=s.epoch,
+                           n_segments=s.n_segments, n_keys=s.n_keys,
+                           pending_inserts=s.pending_inserts,
+                           snapshot_first_key=s.snapshot_first_key,
+                           version=m.shard_set_version)
+                for s in m.shards]

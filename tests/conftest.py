@@ -6,14 +6,22 @@ minimal stand-in covering exactly the subset this suite uses: ``@given`` with
 keyword strategies, ``@settings(max_examples=..., deadline=...)``, and
 ``st.integers / floats / booleans / sampled_from / lists / just`` with
 ``.map()``.  Draws are seeded per test function, so runs are reproducible.
+
+The whole suite runs with the runtime concurrency sanitizer on by default
+(``repro.analysis.sanitizer``: frozen published arrays, shard-set pin
+tracking, lock-order watchdog).  Export ``REPRO_SANITIZE=0`` to measure or
+debug without it; CI's bench jobs do exactly that.
 """
 from __future__ import annotations
 
 import importlib.util
+import os
 import random
 import sys
 import types
 import zlib
+
+os.environ.setdefault("REPRO_SANITIZE", "1")
 
 
 def _install_hypothesis_stub() -> None:

@@ -1,0 +1,505 @@
+"""The analyzer analyzed: per-rule good/bad fixtures, suppression handling,
+lock-order cycle detection, the end-to-end clean-on-src/repro gate, and the
+runtime sanitizer (freeze-on-publish, PinTracker, lock-order watchdog)."""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer
+from repro.analysis.contracts import LOCK_ORDER, hot_path
+from repro.analysis.invariants import RULES, Analyzer, check_source
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def codes(violations):
+    return [v.rule for v in violations]
+
+
+def check(src: str, path: str = "repro/somewhere/mod.py"):
+    return check_source(textwrap.dedent(src), path)
+
+
+# --------------------------------------------------------------------- RI001
+class TestRI001FrozenMutation:
+    def test_fires_on_annotated_param_store(self):
+        vs = check("""
+            def f(table: SegmentTable):
+                table.epoch = 2
+        """)
+        assert codes(vs) == ["RI001"]
+        assert "SegmentTable" in vs[0].message
+
+    def test_fires_on_constructor_local_and_del(self):
+        vs = check("""
+            def f():
+                snap = Snapshot(table=None, epoch=1, n_refit=0)
+                snap.epoch = 2
+                del snap.payload
+        """)
+        assert codes(vs) == ["RI001", "RI001"]
+
+    def test_fires_on_object_setattr_outside_allowlist(self):
+        vs = check("""
+            def f(plan):
+                object.__setattr__(plan, "revision", 99)
+        """)
+        assert codes(vs) == ["RI001"]
+
+    def test_fires_on_self_store_in_frozen_class_method(self):
+        vs = check("""
+            class ShardSet:
+                def grow(self):
+                    self.version = self.version + 1
+        """)
+        assert codes(vs) == ["RI001"]
+
+    def test_clean_on_init_and_builders(self):
+        vs = check("""
+            class ShardSet:
+                def __post_init__(self):
+                    object.__setattr__(self, "version", int(self.version))
+            def g():
+                table = SegmentTable.from_keys([1.0], 4)
+                return table.n_segments
+        """)
+        assert vs == []
+
+    def test_allowlisted_builder_is_clean(self):
+        vs = check("""
+            def device_index(table):
+                object.__setattr__(table, "_device_cache", 1)
+        """, path="src/repro/index/engine.py")
+        assert vs == []
+
+    def test_reassigned_local_is_not_frozen(self):
+        vs = check("""
+            def f():
+                t = SegmentTable.empty(4)
+                t = make_mutable_copy(t)
+                t.epoch = 2
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI002
+class TestRI002DoubleDeref:
+    def test_fires_on_double_shard_set_read(self):
+        vs = check("""
+            class Svc:
+                def lookup(self, q):
+                    sid = route(self._shard_set.boundaries, q)
+                    return self._shard_set.handles[0]
+        """)
+        assert codes(vs) == ["RI002"]
+        assert "first read at line" in vs[0].message
+
+    def test_fires_on_handle_suffix_field(self):
+        vs = check("""
+            def f(svc):
+                a = svc.serving_handle.epoch
+                b = svc.serving_handle.epoch
+        """)
+        assert codes(vs) == ["RI002"]
+
+    def test_clean_when_pinned_once(self):
+        vs = check("""
+            class Svc:
+                def lookup(self, q):
+                    ss = self._shard_set
+                    return route(ss.boundaries, q), ss.handles
+                def install(self, new):
+                    self._shard_set = new      # store, not a read
+        """)
+        assert vs == []
+
+    def test_separate_methods_pin_independently(self):
+        vs = check("""
+            class Svc:
+                def a(self):
+                    return self._shard_set.version
+                def b(self):
+                    return self._shard_set.version
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI003
+class TestRI003InplaceMutation:
+    def test_fires_on_subscript_store_through_field(self):
+        vs = check("""
+            def f(snap):
+                snap.table.keys[0] = -1.0
+        """)
+        assert codes(vs) == ["RI003"]
+
+    def test_fires_on_alias_augassign_and_methods(self):
+        vs = check("""
+            def f(table):
+                k = table.keys
+                k[3:] = 0.0
+                k += 1
+                table.start_key.sort()
+        """)
+        assert codes(vs) == ["RI003", "RI003", "RI003"]
+
+    def test_copy_breaks_the_alias(self):
+        vs = check("""
+            def f(table):
+                k = table.keys.copy()
+                k[0] = -1.0
+                k.sort()
+        """)
+        assert vs == []
+
+    def test_local_scratch_arrays_are_fine(self):
+        vs = check("""
+            def f(n):
+                boundaries = np.empty(n)
+                boundaries[0] = 1.0
+                out = np.zeros(n)
+                out[1:] = 2.0
+                out.fill(0)
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI004
+class TestRI004HostOnlyImports:
+    def test_fires_on_module_scope_jax(self):
+        vs = check("""
+            import numpy as np
+            import jax
+        """, path="src/repro/index/table.py")
+        assert codes(vs) == ["RI004"]
+
+    def test_fires_on_transitive_accel_module(self):
+        vs = check("""
+            from repro.index.engine import make_engine
+        """, path="src/repro/core/tree.py")
+        assert codes(vs) == ["RI004"]
+
+    def test_fires_on_relative_import_of_engine(self):
+        vs = check("""
+            from .engine import make_engine
+        """, path="src/repro/index/telemetry.py")
+        assert codes(vs) == ["RI004"]
+
+    def test_clean_on_lazy_and_type_checking_imports(self):
+        vs = check("""
+            from typing import TYPE_CHECKING
+            if TYPE_CHECKING:
+                import jax
+            def f():
+                import jax.numpy as jnp
+                return jnp
+        """, path="src/repro/index/table.py")
+        assert vs == []
+
+    def test_non_host_modules_may_import_jax(self):
+        vs = check("import jax\n", path="src/repro/index/engine.py")
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI005
+class TestRI005HotPath:
+    def test_fires_on_lock_acquisition(self):
+        vs = check("""
+            class M:
+                @hot_path
+                def record(self, v):
+                    with self._make_lock:
+                        pass
+        """)
+        assert codes(vs) == ["RI005"]
+
+    def test_fires_on_logging_and_acquire(self):
+        vs = check("""
+            @hot_path
+            def dispatch(q):
+                logging.info("dispatching %s", q)
+                some_lock.acquire()
+        """)
+        assert sorted(codes(vs)) == ["RI005", "RI005"]
+
+    def test_undecorated_function_may_lock(self):
+        vs = check("""
+            class M:
+                def _make(self):
+                    with self._make_lock:
+                        pass
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI006
+class TestRI006DeprecatedStats:
+    def test_fires_on_each_deprecated_surface(self):
+        vs = check("""
+            def f(svc, pipe):
+                a = svc.stats()
+                b = svc.service_stats()
+                c = pipe.pipeline_stats()
+        """)
+        assert codes(vs) == ["RI006", "RI006", "RI006"]
+
+    def test_metrics_is_clean(self):
+        vs = check("""
+            def f(svc):
+                return svc.metrics().shards
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------------------- RI007
+class TestRI007LockOrder:
+    def test_fires_on_declared_order_inversion(self):
+        vs = check("""
+            class ShardedIndexService:
+                def bad(self):
+                    with self._counts_lock:      # innermost rank
+                        with self._write_lock:   # outermost rank: inversion
+                            pass
+        """)
+        assert codes(vs) == ["RI007"]
+        assert "declared order" in vs[0].message
+
+    def test_fires_on_cycle_between_functions(self):
+        vs = check("""
+            def f():
+                with a_lock:
+                    with b_lock:
+                        pass
+            def g():
+                with b_lock:
+                    with a_lock:
+                        pass
+        """)
+        assert codes(vs) == ["RI007"]
+        assert "cycle" in vs[0].message
+
+    def test_consistent_nesting_is_clean(self):
+        vs = check("""
+            class ShardedIndexService:
+                def good(self):
+                    with self._write_lock:
+                        with self._counts_lock:
+                            pass
+            def h():
+                with a_lock:
+                    with b_lock:
+                        pass
+        """)
+        assert vs == []
+
+
+# --------------------------------------------------------- suppression + CLI
+class TestSuppressionAndDriver:
+    def test_allow_comment_suppresses_only_named_rule(self):
+        vs = check("""
+            def f(svc, table: SegmentTable):
+                a = svc.stats()  # repro: allow[RI006]
+                table.epoch = 2  # repro: allow[RI006]
+        """)
+        assert codes(vs) == ["RI001"]
+
+    def test_allow_comment_takes_a_code_list(self):
+        vs = check("""
+            def f(svc, table: SegmentTable):
+                table.epoch = svc.stats()  # repro: allow[RI001, RI006]
+        """)
+        assert vs == []
+
+    def test_rule_table_covers_all_codes(self):
+        assert sorted(RULES) == [f"RI00{i}" for i in range(1, 8)]
+
+    def test_syntax_error_is_reported_not_raised(self):
+        analyzer = Analyzer()
+        assert analyzer.check_source("def broken(:\n", "bad.py") == []
+        assert analyzer.errors and "syntax error" in analyzer.errors[0]
+
+    def test_declared_lock_order_names_are_unique(self):
+        assert len(set(LOCK_ORDER)) == len(LOCK_ORDER)
+
+
+# ------------------------------------------------------------- end-to-end
+class TestEndToEnd:
+    def test_checker_runs_clean_on_src_repro(self):
+        analyzer = Analyzer()
+        analyzer.check_paths([str(SRC / "repro")])
+        violations = analyzer.finish()
+        assert violations == [], "\n".join(str(v) for v in violations)
+        assert not analyzer.errors, analyzer.errors
+
+    def test_cli_strict_exits_zero_on_src(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", str(SRC), "--strict"],
+            capture_output=True, text=True,
+            cwd=SRC.parent, env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin"})
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_cli_reports_violations_with_exit_one(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(svc):\n    return svc.stats()\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", str(bad)],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin"})
+        assert proc.returncode == 1
+        assert "RI006" in proc.stdout
+        assert f"{bad}:2:" in proc.stdout
+
+
+# ----------------------------------------------------------- sanitizer layer
+@pytest.fixture
+def sanitize_on():
+    prev = sanitizer.set_enabled(True)
+    try:
+        yield
+    finally:
+        sanitizer.set_enabled(prev)
+
+
+class TestSanitizerFreeze:
+    def test_segment_table_arrays_are_frozen(self):
+        from repro.index.table import SegmentTable
+        t = SegmentTable.from_keys(np.linspace(0, 1000, 512), error=16)
+        for name in ("start_key", "slope", "base", "seg_end", "keys"):
+            arr = getattr(t, name)
+            assert not arr.flags.writeable, name
+            with pytest.raises(ValueError):
+                arr[0] = -1
+
+    def test_freeze_copies_scratch_views(self):
+        scratch = np.arange(8, dtype=np.float64)
+        frozen = sanitizer.freeze(scratch[2:5])
+        assert not frozen.flags.writeable
+        scratch[:] = -1.0                  # caller's buffer stays writable
+        assert frozen[0] == 2.0            # ...and the published copy immune
+
+    def test_mutating_a_served_table_raises(self):
+        from repro.index import ShardedIndexService
+        keys = np.sort(np.random.default_rng(3).uniform(0, 1e6, 4000))
+        svc = ShardedIndexService(keys, error=32, n_shards=2, buffer_size=4,
+                                  assume_sorted=True)
+        snap = svc.handles[0].current()
+        with pytest.raises(ValueError):
+            snap.table.keys[0] = -1.0
+        with pytest.raises(ValueError):
+            svc.shard_set.boundaries[0] = 0.0
+
+    def test_published_payload_is_frozen(self):
+        from repro.index import ShardedIndexService
+        keys = np.linspace(0, 100, 256)
+        svc = ShardedIndexService(keys, error=8, n_shards=1, buffer_size=4,
+                                  payload=np.arange(256), assume_sorted=True)
+        payload = svc.handles[0].current().payload
+        with pytest.raises(ValueError):
+            payload[0] = 7
+
+    def test_packed_shard_tables_are_frozen(self):
+        from repro.index import pack_shard_tables
+        from repro.index.table import SegmentTable
+        packed = pack_shard_tables(
+            [SegmentTable.from_keys(np.linspace(i, i + 50, 64), error=8)
+             for i in (0, 100)])
+        for arr in packed[:5]:
+            with pytest.raises(ValueError):
+                arr.flat[0] = -1
+
+
+class TestPinTracker:
+    def test_verbs_pass_under_tracking(self, sanitize_on):
+        from repro.index import ShardedIndexService
+        keys = np.sort(np.random.default_rng(5).uniform(0, 1e5, 2000))
+        svc = ShardedIndexService(keys, error=16, n_shards=4, buffer_size=8,
+                                  assume_sorted=True)
+        q = keys[:64]
+        assert (svc.lookup(q) >= 0).all()
+        svc.search(q)
+        svc.point(q)
+        svc.count(q[:4], q[4:8])
+        svc.range(float(keys[10]), float(keys[90]))
+        svc.predecessor(q)
+        svc.successor(q)
+
+    def test_torn_read_across_rebalance_raises(self, sanitize_on):
+        from repro.index import ShardedIndexService
+        keys = np.sort(np.random.default_rng(6).uniform(0, 1e5, 2000))
+        svc = ShardedIndexService(keys, error=16, n_shards=4, buffer_size=8,
+                                  assume_sorted=True)
+        with pytest.raises(sanitizer.PinViolation, match="torn|versions"):
+            with sanitizer.pin_scope("torn-verb"):
+                svc._pin_shard_set()
+                svc.rebalance(force=True)   # version bump mid-operation
+                svc._pin_shard_set()        # second deref sees the new set
+
+    def test_observe_outside_scope_is_noop(self, sanitize_on):
+        sanitizer.observe_pin(1)
+        sanitizer.observe_pin(2)   # no open scope: nothing to violate
+
+
+class TestLockWatchdog:
+    def test_declared_order_inversion_raises(self, sanitize_on):
+        inner = sanitizer.make_lock("ShardedIndexService._counts_lock")
+        outer = sanitizer.make_rlock("ShardedIndexService._write_lock")
+        with inner:
+            with pytest.raises(sanitizer.LockOrderError,
+                               match="declared order"):
+                outer.acquire()
+
+    def test_runtime_cycle_detected_without_declared_ranks(self, sanitize_on):
+        a = sanitizer.make_lock("TestOnlyA._lock")
+        b = sanitizer.make_lock("TestOnlyB._lock")
+        with a:
+            with b:            # records A -> B
+                pass
+        with b:
+            with pytest.raises(sanitizer.LockOrderError, match="cycle"):
+                a.acquire()    # B -> A closes the loop
+        assert ("TestOnlyA._lock", "TestOnlyB._lock") in \
+            sanitizer.lock_graph_edges()
+
+    def test_consistent_order_passes_and_is_reentrant(self, sanitize_on):
+        outer = sanitizer.make_rlock("ShardedIndexService._write_lock")
+        inner = sanitizer.make_lock("ShardedIndexService._counts_lock")
+        with outer:
+            with outer:        # re-entrant acquire skips the order check
+                with inner:
+                    pass
+
+    def test_serving_stack_flows_clean_under_watchdog(self, sanitize_on):
+        from repro.index import ShardedIndexService
+        from repro.index.telemetry import Monitor
+        keys = np.sort(np.random.default_rng(7).uniform(0, 1e5, 3000))
+        svc = ShardedIndexService(keys, error=16, n_shards=2, buffer_size=8,
+                                  auto_rebalance=True, monitor=Monitor(),
+                                  assume_sorted=True)
+        for k in np.random.default_rng(8).uniform(0, 1e5, 64):
+            svc.insert(float(k))
+        svc.publish()
+        svc.rebalance(force=True)
+        svc.lookup(keys[:128])
+        svc.metrics()
+
+    def test_disabled_returns_plain_locks(self):
+        prev = sanitizer.set_enabled(False)
+        try:
+            lock = sanitizer.make_lock("whatever._lock")
+            assert not isinstance(lock, sanitizer._SanitizedLock)
+        finally:
+            sanitizer.set_enabled(prev)
+
+
+class TestHotPathMarker:
+    def test_decorator_is_a_runtime_noop(self):
+        @hot_path
+        def f(x):
+            return x + 1
+        assert f(1) == 2 and f.__hot_path__
