@@ -15,7 +15,7 @@ import argparse
 import platform
 import time
 
-from . import (bench_insert, bench_lookup, bench_plan, bench_range,
+from . import (bench_insert, bench_lookup, bench_lsm, bench_plan, bench_range,
                bench_rebalance, bench_replan, bench_serving, bench_sharded)
 from .common import write_json
 
@@ -59,6 +59,13 @@ TINY = {
                 dict(n=20_000, n_requests=1_200, rate_factors=(0.5, 3.0),
                      max_wait_us_sweep=(100.0, 1000.0), flush_threshold=128,
                      prewarm_flush=256)),
+    # the tiered write plane: asserts the LSM service sustains a 4x
+    # single-buffer insert flood with read p99 <= 2x its read-only baseline
+    # while the single Alg. 4 buffer visibly degrades, and that every verb
+    # stays bit-identical to the searchsorted oracle across levels
+    "lsm": (bench_lsm.run,
+            dict(n=20_000, n_single_inserts=1_500, n_read_batches=250,
+                 flood_s=1.0)),
 }
 
 

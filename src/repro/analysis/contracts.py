@@ -56,7 +56,9 @@ FROZEN_CLASSES = frozenset({
     "Segments",
     # typed metrics tree (read-only views handed to callers)
     "TierMetrics", "ShardMetrics", "PipelineMetrics", "ServiceMetrics",
-    "MetricsSnapshot",
+    "MetricsSnapshot", "LsmMetrics",
+    # LSM tiered write plane: the atomic level manifest and its parts
+    "LevelSet", "Run", "MemView",
 })
 
 # Builder allowlist: (module path suffix, qualified function name) pairs that
@@ -72,7 +74,7 @@ FROZEN_SETATTR_ALLOW = frozenset({
 # Swap-on-publish handle fields: read paths must bind the current value to a
 # local exactly once ("pin"), then work off the local, or two reads may span
 # a concurrent publish and observe a torn pair of versions.
-PINNED_FIELDS = frozenset({"_shard_set", "_state"})
+PINNED_FIELDS = frozenset({"_shard_set", "_state", "_level_set"})
 PINNED_SUFFIXES = ("_handle", "_snapshot")
 
 # --------------------------------------------------------------------- RI003
@@ -80,7 +82,7 @@ PINNED_SUFFIXES = ("_handle", "_snapshot")
 # ShardSet; in-place numpy mutation through any of these is a data race.
 FROZEN_ARRAY_FIELDS = frozenset({
     "keys", "start_key", "slope", "base", "seg_end", "payload", "boundaries",
-    "count",
+    "count", "tombstones", "shadow_keys", "shadow_cum",
 })
 # ndarray methods that mutate in place.
 INPLACE_NDARRAY_METHODS = frozenset({
@@ -105,7 +107,7 @@ ACCEL_IMPORT_ROOTS = (
     "repro.compat",
     "repro.kernels", "repro.models",
     "repro.index.engine", "repro.index.snapshot", "repro.index.sharded",
-    "repro.index.pipeline", "repro.index.fit",
+    "repro.index.pipeline", "repro.index.fit", "repro.index.lsm",
     "repro.core.jax_index", "repro.core.distributed",
 )
 
@@ -125,14 +127,20 @@ DEPRECATED_CALLS = frozenset({"stats", "service_stats", "pipeline_stats"})
 # acquire locks j > i.  Names are ``ClassName.attr`` (matching both the
 # static graph keys and the names passed to ``sanitizer.make_lock``).
 LOCK_ORDER = (
-    "ShardedIndexService._write_lock",   # writer serialisation (outermost)
+    "Compactor._lock",                   # one merge in flight (outermost:
+                                         # the merge section swaps manifests
+                                         # via the LSM write lock)
+    "ShardedIndexService._write_lock",   # writer serialisation
+    "LsmIndexService._write_lock",       # LSM writer / manifest swap
     "AsyncIndexService._lock",           # pipeline queue state
+    "Memtable._lock",                    # memtable mutate / view build
     "ServingHandle._lock",               # per-shard install swap
     "DispatchEngine._lock",              # lazy tier-engine build
     "_DeviceEngine._search_lock",        # lazy search-kernel build
     "Monitor._make_lock",                # channel-ring creation
     "JSONLBackend._io_lock",             # telemetry sink flush
-    "ShardedIndexService._counts_lock",  # verb counters (innermost)
+    "ShardedIndexService._counts_lock",  # verb counters
+    "LsmIndexService._counts_lock",      # LSM verb counters (innermost)
 )
 
 LOCK_RANK = {name: i for i, name in enumerate(LOCK_ORDER)}

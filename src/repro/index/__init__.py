@@ -23,6 +23,10 @@ Module map (see ROADMAP.md):
                  ``ServingHandle`` atomic swap into serving
   sharded.py  -- ``ShardedIndexService``: N key-partitioned writers with
                  per-shard epoch streams; ``pack_shard_tables`` device bridge
+  lsm.py      -- ``LsmIndexService``: the tiered write plane (bounded
+                 ``Memtable`` -> immutable learned runs -> background
+                 ``Compactor``), one atomic versioned ``LevelSet`` manifest,
+                 and the multi-level leftmost-rank fan-in for every verb
   fit.py      -- ``FitSpec`` -> ``plan()`` -> ``IndexPlan`` -> ``open_index``:
                  the Sec. 6 cost model resolving SLOs into every knob above
   pipeline.py -- ``AsyncIndexService``/``open_pipeline``: the coalescing
@@ -55,19 +59,22 @@ _SHARDED_NAMES = {"PackedShardTables", "ShardSet", "ShardStats",
                   "ShardedIndexService", "pack_shard_tables"}
 _FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
               "open_index", "plan"}
+_LSM_NAMES = {"Compactor", "LevelSet", "LsmIndexService", "MemView",
+              "Memtable", "MemtableFullError", "Run"}
 _PIPELINE_NAMES = {"AsyncIndexService", "PipelineClosed",
                    "PipelineOverloaded", "open_pipeline"}
-_TELEMETRY_NAMES = {"JSONLBackend", "MemoryBackend", "MetricsSnapshot",
-                    "Monitor", "PipelineMetrics", "Replanner",
-                    "ServiceMetrics", "ShardMetrics", "TierMetrics",
-                    "tier_metrics"}
+_TELEMETRY_NAMES = {"JSONLBackend", "LsmMetrics", "MemoryBackend",
+                    "MetricsSnapshot", "Monitor", "PipelineMetrics",
+                    "Replanner", "ServiceMetrics", "ShardMetrics",
+                    "TierMetrics", "tier_metrics"}
 
 __all__ = [
     "PointResult", "QueryVerbs", "RangeResult", "SegmentTable",
     "build_shard_tables", "numpy_lookup", "numpy_search", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
-    *sorted(_FIT_NAMES), *sorted(_PIPELINE_NAMES), *sorted(_TELEMETRY_NAMES),
+    *sorted(_FIT_NAMES), *sorted(_LSM_NAMES), *sorted(_PIPELINE_NAMES),
+    *sorted(_TELEMETRY_NAMES),
 ]
 
 
@@ -84,6 +91,9 @@ def __getattr__(name):
     if name in _FIT_NAMES:
         from . import fit
         return getattr(fit, name)
+    if name in _LSM_NAMES:
+        from . import lsm
+        return getattr(lsm, name)
     if name in _PIPELINE_NAMES:
         from . import pipeline
         return getattr(pipeline, name)

@@ -103,6 +103,13 @@ class FitSpec:
     * ``insert_rate`` -- expected inserts/second; drives the shard count
       (independent per-shard epoch streams absorb write traffic) and the
       auto-publish cadence.
+    * ``write_heavy`` -- tri-state write-mode override.  ``True`` plans the
+      LSM tiered write path (``repro.index.lsm``: memtable -> learned runs ->
+      background compaction) regardless of the buffer math; ``False`` pins
+      the paper's in-place Alg. 4 buffer path (and an error=1 plan under
+      inserts stays a loud failure); ``None`` (default) lets the planner
+      decide -- it falls back to LSM exactly when the resolved error leaves
+      no room for an insert buffer but the spec promises write traffic.
     * ``duplicate_density`` -- expected fraction of duplicated keys in
       [0, 1); caps the shard count (duplicate-safe cuts need at least one
       distinct key run per shard).
@@ -132,6 +139,7 @@ class FitSpec:
     # workload hints
     batch_sizes: tuple[int, ...] | None = None
     insert_rate: float = 0.0
+    write_heavy: bool | None = None
     duplicate_density: float = 0.0
     range_fraction: float = 0.0
     range_scan_rows: int = 256
@@ -171,6 +179,10 @@ class FitSpec:
         if self.insert_rate < 0:
             raise ValueError(f"insert_rate must be >= 0, got "
                              f"{self.insert_rate!r}")
+        if self.write_heavy is not None \
+                and not isinstance(self.write_heavy, bool):
+            raise ValueError(f"write_heavy must be True, False or None (let "
+                             f"the planner decide), got {self.write_heavy!r}")
         if not 0.0 <= self.duplicate_density < 1.0:
             raise ValueError(f"duplicate_density must be in [0, 1), got "
                              f"{self.duplicate_density!r}")
@@ -280,6 +292,12 @@ class IndexPlan:
     small_max: int | None = None
     large_min: int | None = None
     publish_every: int | None = None
+    # write mode: "inplace" is the paper's Alg. 4 per-tree delta buffer;
+    # "lsm" routes writes through the tiered memtable -> learned-run ->
+    # compaction plane (repro.index.lsm), sized by the two knobs below.
+    write_mode: str = "inplace"
+    memtable_capacity: int | None = None
+    level_fanout: int | None = None
     # async-pipeline knobs (repro.index.pipeline.AsyncIndexService): fuse
     # queued queries once flush_threshold of them are waiting (the planner
     # sets it to the large-tier dispatch crossing, so fused batches ride the
@@ -311,6 +329,19 @@ class IndexPlan:
         if (self.small_max is None) != (self.large_min is None):
             raise ValueError("small_max and large_min must be set together "
                              "(or both None to defer to the cost model)")
+        if self.write_mode not in ("inplace", "lsm"):
+            raise ValueError(f"write_mode must be 'inplace' or 'lsm', got "
+                             f"{self.write_mode!r}")
+        if self.memtable_capacity is not None and self.memtable_capacity < 2:
+            raise ValueError(f"memtable_capacity must be >= 2, got "
+                             f"{self.memtable_capacity}")
+        if self.level_fanout is not None and self.level_fanout < 2:
+            raise ValueError(f"level_fanout must be >= 2, got "
+                             f"{self.level_fanout}")
+        if self.write_mode == "lsm" and self.n_shards != 1:
+            raise ValueError("an lsm-mode plan is single-service (the level "
+                             "structure absorbs write traffic instead of "
+                             f"shard fan-out); got n_shards={self.n_shards}")
         if self.flush_threshold is not None and self.flush_threshold < 1:
             raise ValueError(f"flush_threshold must be >= 1, got "
                              f"{self.flush_threshold}")
@@ -325,12 +356,17 @@ class IndexPlan:
     @classmethod
     def from_knobs(cls, error: int, *, n_shards: int = 1, buffer_size: int = 0,
                    backend: str = "numpy",
-                   publish_every: int | None = None) -> "IndexPlan":
+                   publish_every: int | None = None,
+                   write_mode: str = "inplace",
+                   memtable_capacity: int | None = None,
+                   level_fanout: int | None = None) -> "IndexPlan":
         """Trivial resolution: wrap raw expert knobs as a plan (no cost-model
         run; dispatch thresholds stay cost-model-derived at build time)."""
         return cls(error=int(error), n_shards=int(n_shards),
                    buffer_size=int(buffer_size), backend=backend,
-                   publish_every=publish_every, objective="raw")
+                   publish_every=publish_every, write_mode=write_mode,
+                   memtable_capacity=memtable_capacity,
+                   level_fanout=level_fanout, objective="raw")
 
     # --------------------------------------------------------------- revision
     def replace(self, **knobs) -> "IndexPlan":
@@ -377,6 +413,20 @@ class IndexPlan:
             f"buffer_size={self.buffer_size}  backend={self.backend}  "
             f"publish_every={self.publish_every}",
         ]
+        if self.write_mode == "lsm":
+            if self.spec is not None and self.spec.write_heavy:
+                why = "spec declares write_heavy=True"
+            elif self.spec is not None and self.spec.insert_rate > 0:
+                why = (f"error={self.error} leaves no Alg. 4 insert buffer "
+                       f"yet the spec promises insert_rate="
+                       f"{self.spec.insert_rate:g}/s")
+            else:
+                why = "requested via raw knobs"
+            lines.append(
+                f"  write mode: lsm ({why}) -- memtable of "
+                f"{self.memtable_capacity} keys spills into size-tiered "
+                f"learned runs, compaction merges {self.level_fanout} runs "
+                f"per level off the serving path")
         if self.small_max is not None:
             lines.append(
                 f"  dispatch tiers (cost-model crossings): host <= "
@@ -447,16 +497,49 @@ def planned_buffer(error: int) -> int:
 
 def _plan_buffer(spec: FitSpec, error: int) -> int:
     """The chosen error's buffer, with the write-traffic conflict made loud
-    (an error=1 plan cannot honor a promised insert rate)."""
+    (an error=1 plan cannot honor a promised insert rate).  Only reachable
+    when the spec pins ``write_heavy=False``; the default tri-state resolves
+    this case to the LSM write mode instead (:func:`_plan_write_mode`)."""
     buffer = planned_buffer(error)
     if buffer == 0 and spec.insert_rate > 0:
         raise ValueError(
             "the resolved error=1 leaves no room for an Alg. 4 insert "
             "buffer (buffer_size < error, Sec. 5), but the spec promises "
             f"insert_rate={spec.insert_rate:g}/s; relax the budget so a "
-            "larger error is chosen, or drop the insert_rate hint for a "
-            "read-only index")
+            "larger error is chosen, drop the insert_rate hint for a "
+            "read-only index, or lift write_heavy=False so the planner can "
+            "fall back to the LSM write mode")
     return buffer
+
+
+# LSM sizing: spill roughly every _LSM_SPILL_PERIOD_S of expected ingest so
+# runs stay re-fit-sized, clamped to keep memtable writes O(small memmove).
+_LSM_SPILL_PERIOD_S = 0.25
+_LSM_MEMTABLE_MIN = 1024
+_LSM_MEMTABLE_MAX = 65_536
+_LSM_DEFAULT_FANOUT = 4
+
+
+def _plan_write_mode(spec: FitSpec, error: int) -> str:
+    """Resolve the tri-state ``write_heavy`` hint: explicit wins; unset
+    falls back to LSM exactly when the in-place path would be a planning
+    error (no Alg. 4 buffer fits yet inserts are promised)."""
+    if spec.write_heavy is False:
+        return "inplace"
+    if spec.write_heavy:
+        return "lsm"
+    if spec.insert_rate > 0 and planned_buffer(error) == 0:
+        return "lsm"
+    return "inplace"
+
+
+def _plan_memtable(spec: FitSpec) -> int:
+    """Memtable capacity from the promised ingest: ~one spill per
+    ``_LSM_SPILL_PERIOD_S`` at ``insert_rate``, clamped."""
+    if spec.insert_rate <= 0:
+        return _LSM_MEMTABLE_MIN * 4
+    cap = int(spec.insert_rate * _LSM_SPILL_PERIOD_S)
+    return min(max(cap, _LSM_MEMTABLE_MIN), _LSM_MEMTABLE_MAX)
 
 
 def _effective_scorers(spec: FitSpec, segments_fn):
@@ -586,7 +669,17 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
         chosen = int(spec.error)
         feasible = {e: True for e, _ in rows}
 
-    buffer_size = _plan_buffer(spec, chosen)
+    write_mode = _plan_write_mode(spec, chosen)
+    if write_mode == "lsm":
+        # no Alg. 4 buffer exists on the tiered path: the memtable is the
+        # write absorber and compaction the re-fit cadence
+        buffer_size = 0
+        memtable_capacity = _plan_memtable(spec)
+        level_fanout = _LSM_DEFAULT_FANOUT
+    else:
+        buffer_size = _plan_buffer(spec, chosen)
+        memtable_capacity = None
+        level_fanout = None
     n_segments = eff_segments(chosen)
     # thresholds for the table the engine will actually see: a published
     # snapshot carries err_seg as its error (tree.as_table), and
@@ -595,12 +688,15 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
         max(1, chosen - buffer_size), n_segments,
         spec.cpu_params, spec.tpu_params,
         range_fraction=spec.range_fraction, scan_rows=spec.range_scan_rows)
-    n_shards = _plan_shards(spec, arr.shape[0])
+    # LSM plans stay single-service: the level structure absorbs the write
+    # traffic the shard heuristic would otherwise fan out over epochs
+    n_shards = 1 if write_mode == "lsm" else _plan_shards(spec, arr.shape[0])
     backend = _plan_backend(spec, small_max, large_min)
     # auto-publish roughly once per second of expected write traffic, kept
-    # inside sane bounds; read-only workloads publish manually
+    # inside sane bounds; read-only workloads publish manually (the lsm
+    # cadence drives spill/compaction maintenance through the same knob)
     publish_every = None
-    if spec.insert_rate > 0 and buffer_size > 0:
+    if spec.insert_rate > 0 and (buffer_size > 0 or write_mode == "lsm"):
         publish_every = int(min(max(spec.insert_rate, 64), 65_536))
     # async-pipeline knobs: fuse once a flush earns the large (fused) tier,
     # bound the wait for a partial batch, and give the queue a few flushes of
@@ -618,7 +714,9 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
     return IndexPlan(error=chosen, n_shards=n_shards,
                      buffer_size=buffer_size, backend=backend,
                      small_max=small_max, large_min=large_min,
-                     publish_every=publish_every,
+                     publish_every=publish_every, write_mode=write_mode,
+                     memtable_capacity=memtable_capacity,
+                     level_fanout=level_fanout,
                      flush_threshold=flush_threshold,
                      max_wait_us=max_wait_us, queue_depth=queue_depth,
                      objective=spec.objective,
@@ -631,9 +729,10 @@ def open_index(keys, spec_or_plan: "FitSpec | IndexPlan", *,
                payload: np.ndarray | None = None, **service_kwargs):
     """The single SLO-driven entry point: plan (if needed) and build.
 
-    Returns an ``IndexService`` for a one-shard plan, else a
-    ``ShardedIndexService`` -- both ready for the full insert -> publish ->
-    lookup cycle with no raw knob supplied by the caller.  Extra
+    Returns an ``LsmIndexService`` for a ``write_mode="lsm"`` plan, an
+    ``IndexService`` for a one-shard plan, else a ``ShardedIndexService`` --
+    all ready for the full insert -> publish -> lookup cycle with no raw
+    knob supplied by the caller.  Extra
     ``service_kwargs`` (e.g. ``skew_threshold``, ``auto_rebalance``,
     ``mode``) pass through to the service constructor.
     """
@@ -656,6 +755,10 @@ def open_index(keys, spec_or_plan: "FitSpec | IndexPlan", *,
         raise TypeError(f"open_index needs a FitSpec or IndexPlan, got "
                         f"{type(spec_or_plan).__name__}")
     # lazy: the services import this module for their plan= constructors
+    if resolved.write_mode == "lsm":
+        from .lsm import LsmIndexService
+        return LsmIndexService.from_plan(keys, resolved, payload=payload,
+                                         **service_kwargs)
     if resolved.n_shards > 1:
         from .sharded import ShardedIndexService
         return ShardedIndexService.from_plan(keys, resolved, payload=payload,

@@ -217,7 +217,7 @@ class AsyncIndexService:
                        "deadline_flushes": 0, "drain_flushes": 0,
                        "inline_batches": 0, "coalesced_queries": 0,
                        "max_fused_batch": 0, "publishes": 0,
-                       "maintenance_ticks": 0}
+                       "maintenance_ticks": 0, "compactions": 0}
 
         if prewarm:
             self.prewarm()
@@ -411,8 +411,11 @@ class AsyncIndexService:
         try:
             while not stop.wait(self.publish_interval_s):
                 result = self.service.publish()
-                if isinstance(result, dict):     # sharded: {sid: Snapshot}
-                    did_publish = bool(result)
+                compacted = 0
+                if isinstance(result, dict):     # sharded: {sid: Snapshot};
+                    did_publish = bool(result)   # lsm: maintenance summary
+                    compacted = result.get("compacted", 0) \
+                        if result else 0         # cadence-driven merges
                 else:                            # IndexService: a Snapshot,
                     did_publish = result.epoch != last_epoch  # same on no-op
                     last_epoch = result.epoch
@@ -420,6 +423,8 @@ class AsyncIndexService:
                     self._stats["maintenance_ticks"] += 1
                     if did_publish:
                         self._stats["publishes"] += 1
+                    if compacted:
+                        self._stats["compactions"] += compacted
                 if self.replanner is not None:
                     # measured telemetry -> re-fit -> (maybe) hot-swap, all on
                     # this thread; rate-limited by the replanner's interval

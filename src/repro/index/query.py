@@ -102,6 +102,25 @@ def check_range(lo, hi) -> tuple[float, float]:
     return lo, hi
 
 
+def merge_sorted_sources(parts_keys, parts_payload=None):
+    """Stable k-way merge of per-source sorted key slices (the multi-level
+    fan-in materializer: memtable + LSM runs, or any overlapping sources).
+
+    Each element of ``parts_keys`` is a sorted array; the merged key column
+    is globally sorted and, among *equal* keys, source order is preserved --
+    pass sources newest-first and duplicates surface newest-first, the
+    newest-level-wins contract the tiered write plane materializes ranges
+    under.  ``parts_payload`` (parallel slices) rides the same permutation;
+    returns ``(keys, payload-or-None)``."""
+    keys = (np.concatenate([np.asarray(p, np.float64) for p in parts_keys])
+            if parts_keys else np.empty(0, np.float64))
+    order = np.argsort(keys, kind="stable")
+    merged = keys[order]
+    if parts_payload is None:
+        return merged, None
+    return merged, np.concatenate(parts_payload)[order]
+
+
 class QueryVerbs:
     """Derives every typed verb from ``self.search(queries, side)``.
 

@@ -53,6 +53,30 @@ class Snapshot:
     def n_keys(self) -> int:
         return self.table.n_keys
 
+    @classmethod
+    def from_arrays(cls, keys, error: int, *, payload=None, epoch: int = 0,
+                    mode: str = "paper",
+                    assume_sorted: bool = False) -> "Snapshot":
+        """Fit-and-publish in one step: a fresh epoch straight from raw
+        arrays, bypassing the mutable tree (the LSM run-build path, bulk
+        loads, tests).  Keys and payload are co-sorted unless
+        ``assume_sorted``; both arrays freeze on publish."""
+        arr = np.asarray(keys, np.float64).ravel()
+        pay = None if payload is None else np.asarray(payload).ravel()
+        if pay is not None and pay.size != arr.size:
+            raise ValueError(f"payload length {pay.size} != key length "
+                             f"{arr.size}")
+        if arr.size and not assume_sorted:
+            order = np.argsort(arr, kind="stable")
+            arr = arr[order]
+            if pay is not None:
+                pay = pay[order]
+        table = (SegmentTable.from_keys(arr, error, mode=mode,
+                                        assume_sorted=True, epoch=epoch)
+                 if arr.size else SegmentTable.empty(error, epoch=epoch))
+        return cls(table=table, epoch=epoch, n_refit=table.n_segments,
+                   payload=None if pay is None else published_array(pay))
+
 
 class SnapshotPublisher:
     """Write-side: turns a mutable FITingTree into a stream of snapshots."""

@@ -77,6 +77,11 @@ CH_FLUSH = "pipeline.flush"         # (cause, fused_batch)
 CH_SOJOURN = "pipeline.sojourn"     # (ns,) per-request enqueue->resolve
 CH_REPLAN = "replan"                # (applied, win, small_max, large_min,
                                     #  n_shards)
+CH_MEMTABLE = "lsm.memtable"        # (keys, tombstones, capacity) occupancy
+CH_SPILL = "lsm.spill"              # (spilled_keys, wall_ns)
+CH_COMPACT = "lsm.compaction"       # (runs_merged, merged_keys, wall_ns)
+CH_READ_AMP = "lsm.read_amp"        # (fan_in_sources,) sampled per verb
+CH_RUN_COUNT = "lsm.runs"           # (n_runs,) after each manifest swap
 
 # pipeline.flush cause codes
 FLUSH_THRESHOLD, FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_INLINE = 0, 1, 2, 3
@@ -349,6 +354,29 @@ class PipelineMetrics:
     max_wait_us: float = 0.0
     queue_depth: int = 0
     replans: int = 0
+    compactions: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LsmMetrics:
+    """The tiered write plane's node in the metrics tree (``lsm.*``
+    channels + the current ``LevelSet`` shape).
+
+    ``run_counts``/``run_keys`` are per-level (index 0 = freshest spills);
+    ``read_amplification`` is the measured mean fan-in width per verb when a
+    monitor is attached, else the current worst case ``1 + n_runs``."""
+    level_set_version: int
+    memtable_keys: int
+    memtable_tombstones: int
+    memtable_capacity: int
+    n_runs: int
+    n_levels: int
+    run_counts: tuple[int, ...]
+    run_keys: tuple[int, ...]
+    live_keys: int
+    spills: int
+    compactions: int
+    read_amplification: float
 
 
 @dataclasses.dataclass(frozen=True)
@@ -374,6 +402,7 @@ class ServiceMetrics:
     shards: tuple[ShardMetrics, ...] = ()
     tiers: tuple[TierMetrics, ...] = ()
     pipeline: PipelineMetrics | None = None
+    lsm: LsmMetrics | None = None
     schema_version: int = METRICS_SCHEMA_VERSION
 
     def to_json(self) -> str:
@@ -392,6 +421,11 @@ class ServiceMetrics:
         d["tiers"] = tuple(TierMetrics(**t) for t in d.get("tiers", ()))
         if d.get("pipeline") is not None:
             d["pipeline"] = PipelineMetrics(**d["pipeline"])
+        if d.get("lsm") is not None:
+            lsm = dict(d["lsm"])
+            lsm["run_counts"] = tuple(lsm.get("run_counts", ()))
+            lsm["run_keys"] = tuple(lsm.get("run_keys", ()))
+            d["lsm"] = LsmMetrics(**lsm)
         return cls(**d)
 
 

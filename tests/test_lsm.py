@@ -1,0 +1,317 @@
+"""The LSM tiered write plane (``repro.index.lsm``).
+
+Covers: the multi-level leftmost-rank fan-in against a ``np.searchsorted``
+oracle on duplicate-heavy keys straddling memtable + runs (all five verbs,
+before and after compaction), delete/upsert shadowing across spills
+(tombstone-only spills included, payload newest-wins), ``insert_many`` ==
+repeated ``insert``, a deliberately slowed compaction racing live readers
+and a spilling writer (no torn ``LevelSet`` ever observed), the typed
+``LsmMetrics`` node + lsm.* telemetry channels, the planner's write-mode
+resolution (``write_heavy`` tri-state, ``open_index`` routing, knob/plan
+clash), and the async pipeline's maintenance cadence driving compaction.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.index import (FitSpec, IndexPlan, LsmIndexService, Monitor,
+                         ServiceMetrics, open_index, plan)
+from repro.index.lsm import Memtable, MemtableFullError
+from repro.index.telemetry import (CH_COMPACT, CH_MEMTABLE, CH_READ_AMP,
+                                   CH_RUN_COUNT, CH_SPILL)
+
+
+def _dup_heavy(rng, n, lim):
+    """Integer-valued float keys from a small domain: duplicate-heavy."""
+    return rng.integers(0, lim, size=n).astype(np.float64)
+
+
+class _Oracle:
+    """The live multiset as a plain sorted array, mirroring LSM semantics:
+    ``delete`` drops every live occurrence, ``upsert`` leaves exactly one."""
+
+    def __init__(self, keys=()):
+        self.keys = np.sort(np.asarray(keys, np.float64))
+
+    def insert(self, ks):
+        self.keys = np.sort(np.concatenate(
+            [self.keys, np.atleast_1d(np.asarray(ks, np.float64))]))
+
+    def delete(self, k):
+        self.keys = self.keys[self.keys != k]
+
+    def upsert(self, k):
+        self.delete(k)
+        self.insert([k])
+
+
+def _check_all_verbs(svc, oracle: _Oracle, probes: np.ndarray):
+    keys = oracle.keys
+    assert svc.n_live_keys() == keys.size
+    for side in ("left", "right"):
+        np.testing.assert_array_equal(
+            svc.search(probes, side), np.searchsorted(keys, probes, side))
+    for q in probes[:24]:
+        l = int(np.searchsorted(keys, q, "left"))
+        r = int(np.searchsorted(keys, q, "right"))
+        p = svc.point(float(q))
+        assert p.found == (r > l) and p.rank == (l if p.found else -1)
+        pred = svc.predecessor(float(q))
+        assert pred.rank == r - 1 and pred.found == (r > 0)
+        suc = svc.successor(float(q))
+        assert suc.rank == l and suc.found == (l < keys.size)
+    lo = float(np.min(probes)) + 1.0
+    hi = float(np.max(probes)) - 1.0
+    a = int(np.searchsorted(keys, lo, "left"))
+    b = int(np.searchsorted(keys, hi, "right"))
+    assert int(svc.count(lo, hi)) == b - a
+    rr = svc.range(lo, hi)
+    assert (rr.lo_rank, rr.hi_rank) == (a, max(b, a))
+    np.testing.assert_array_equal(rr.keys, keys[a:b])
+
+
+# ------------------------------------------------------- fan-in vs the oracle
+def test_fan_in_matches_searchsorted_oracle_across_levels():
+    rng = np.random.default_rng(11)
+    base = np.sort(_dup_heavy(rng, 600, 120))
+    svc = LsmIndexService(base, error=16, assume_sorted=True,
+                          memtable_capacity=32, level_fanout=3)
+    oracle = _Oracle(base)
+    probes = np.concatenate([_dup_heavy(rng, 64, 120),
+                             rng.uniform(-5, 130, size=32)])
+    for step in range(1200):
+        op = rng.random()
+        k = float(rng.integers(0, 120))
+        if op < 0.55:
+            svc.insert(k)
+            oracle.insert([k])
+        elif op < 0.75:
+            svc.delete(k)
+            oracle.delete(k)
+        else:
+            svc.upsert(k)
+            oracle.upsert(k)
+        if step % 97 == 0:
+            svc.publish()
+        if step % 211 == 0:
+            _check_all_verbs(svc, oracle, probes)
+    assert svc.level_set.n_runs > 1      # the workload actually tiered
+    _check_all_verbs(svc, oracle, probes)
+    svc.spill()
+    while svc.compact(max_steps=4):
+        pass
+    _check_all_verbs(svc, oracle, probes)
+
+
+def test_insert_many_equals_repeated_inserts():
+    rng = np.random.default_rng(3)
+    base = np.sort(_dup_heavy(rng, 300, 64))
+    batch = _dup_heavy(rng, 500, 64)
+    one = LsmIndexService(base, error=16, assume_sorted=True,
+                          memtable_capacity=64)
+    many = LsmIndexService(base, error=16, assume_sorted=True,
+                           memtable_capacity=64)
+    for k in batch:
+        one.insert(float(k))
+    assert many.insert_many(batch) == batch.size
+    probes = np.arange(-1.0, 66.0, 0.5)
+    assert one.n_live_keys() == many.n_live_keys() == base.size + batch.size
+    for side in ("left", "right"):
+        np.testing.assert_array_equal(one.search(probes, side),
+                                      many.search(probes, side))
+
+
+# ------------------------------------------------------------------ shadowing
+def test_delete_and_upsert_shadow_older_levels():
+    base = np.repeat(np.arange(8, dtype=np.float64), 3)     # 3 copies each
+    svc = LsmIndexService(base, error=8, assume_sorted=True,
+                          memtable_capacity=4)
+    assert svc.spill() == 0               # nothing buffered: a no-op
+    svc.insert(3.0)                       # 4th copy, newest level
+    svc.delete(3.0)                       # kills memtable copy AND the run's
+    assert int(svc.count(3.0, 3.0)) == 0
+    assert svc.n_live_keys() == base.size - 3
+    # tombstone-only fills still spill (auto at capacity, then forced) and
+    # the spilled runs keep shadowing older levels with no live keys of
+    # their own
+    for k in (5.0, 6.0, 7.0, 1.0):
+        svc.delete(k)
+    svc.spill()
+    assert int(svc.count(5.0, 7.0)) == 0
+    assert int(svc.count(1.0, 1.0)) == 0
+    assert svc.n_live_keys() == 3 * 3     # keys 0, 2, 4 survive
+    # upsert: one live occurrence, everywhere, across all levels
+    svc.upsert(4.0)
+    assert int(svc.count(4.0, 4.0)) == 1
+    while svc.compact(max_steps=4):
+        pass
+    assert int(svc.count(3.0, 3.0)) == 0
+    assert int(svc.count(4.0, 4.0)) == 1
+    assert svc.n_live_keys() == 7         # 0,0,0  2,2,2  4
+
+
+def test_payload_newest_wins_across_spill_and_compaction():
+    keys = np.arange(8, dtype=np.float64)
+    svc = LsmIndexService(keys, error=8, assume_sorted=True,
+                          memtable_capacity=4, payload=keys * 10)
+    svc.upsert(5.0, 999.0)
+    rr = svc.range(4.0, 6.0)
+    np.testing.assert_array_equal(rr.keys, [4.0, 5.0, 6.0])
+    np.testing.assert_array_equal(rr.payload, [40.0, 999.0, 60.0])
+    svc.spill()
+    while svc.compact(max_steps=4):
+        pass
+    rr = svc.range(4.0, 6.0)
+    np.testing.assert_array_equal(rr.payload, [40.0, 999.0, 60.0])
+
+
+def test_memtable_overflow_and_capacity_contract():
+    mt = Memtable(4)
+    for k in (3.0, 1.0, 2.0, 0.5):
+        mt.insert(k)
+    assert mt.is_full()
+    with pytest.raises(MemtableFullError):
+        mt.insert(9.0)
+    np.testing.assert_array_equal(mt.view().keys, [0.5, 1.0, 2.0, 3.0])
+
+
+# ------------------------------------------------- compaction vs reader race
+def test_slow_compaction_never_tears_the_level_set():
+    rng = np.random.default_rng(7)
+    base = np.sort(_dup_heavy(rng, 400, 80))
+    svc = LsmIndexService(base, error=16, assume_sorted=True,
+                          memtable_capacity=16, level_fanout=4)
+    oracle = _Oracle(base)
+    low = _dup_heavy(rng, 5 * 16, 80)     # enough spills to arm a compaction
+    for k in low:
+        svc.insert(float(k))
+    oracle.insert(low)
+    assert svc.compactor.pick(svc.level_set.runs) is not None
+
+    probes = np.arange(-1.0, 82.0, 0.25)
+    want = {side: np.searchsorted(oracle.keys, probes, side)
+            for side in ("left", "right")}
+    in_merge, release = threading.Event(), threading.Event()
+
+    def hook():
+        in_merge.set()
+        assert release.wait(10.0)
+
+    svc.compactor._merge_hook = hook
+    worker = threading.Thread(target=svc.compact, daemon=True)
+    worker.start()
+    assert in_merge.wait(10.0)
+    try:
+        # merge in flight: readers must see exactly the pre-merge truth
+        for side in ("left", "right"):
+            np.testing.assert_array_equal(svc.search(probes, side),
+                                          want[side])
+        # writer lands keys ABOVE the probe range mid-merge and spills:
+        # the swap must reconcile runs prepended after the group was picked
+        high = np.full(16, 500.0)
+        svc.insert_many(high)
+        oracle.insert(high)
+        svc.spill()
+        for side in ("left", "right"):
+            np.testing.assert_array_equal(svc.search(probes, side),
+                                          want[side])
+    finally:
+        release.set()
+    worker.join(timeout=10.0)
+    assert not worker.is_alive()
+    svc.compactor._merge_hook = None
+    _check_all_verbs(svc, oracle, probes)
+    while svc.compact(max_steps=4):
+        pass
+    _check_all_verbs(svc, oracle, probes)
+
+
+# -------------------------------------------------------- telemetry + metrics
+def test_lsm_metrics_node_channels_and_json_round_trip():
+    monitor = Monitor()
+    rng = np.random.default_rng(5)
+    svc = LsmIndexService(np.arange(64, dtype=np.float64), error=8,
+                          assume_sorted=True, memtable_capacity=8,
+                          level_fanout=2, monitor=monitor)
+    for k in _dup_heavy(rng, 40, 64):
+        svc.insert(float(k))
+    svc.delete(2.0)
+    svc.publish()
+    svc.lookup(np.arange(16, dtype=np.float64))
+    m = svc.metrics()
+    assert m.service == "lsm" and m.lsm is not None
+    lsm = m.lsm
+    assert lsm.spills == svc.level_set.version - 1 - lsm.compactions >= 1
+    assert len(lsm.run_counts) == len(lsm.run_keys) == lsm.n_levels
+    assert sum(lsm.run_counts) == lsm.n_runs >= 1
+    assert lsm.level_set_version == svc.version
+    assert lsm.memtable_capacity == 8
+    assert lsm.live_keys == svc.n_live_keys()
+    assert m.pending_inserts == (svc.level_set.memtable.size
+                                 + svc.level_set.memtable.tombstone_count)
+    assert ServiceMetrics.from_json(m.to_json()) == m
+    for ch in (CH_SPILL, CH_RUN_COUNT, CH_MEMTABLE, CH_READ_AMP):
+        assert monitor.channel(ch).size, ch
+    if lsm.compactions:
+        assert monitor.channel(CH_COMPACT).size
+
+
+# ------------------------------------------------------------------- planner
+def test_write_heavy_spec_plans_the_lsm_mode():
+    keys = np.sort(np.random.default_rng(1).uniform(0, 1e6, 4096))
+    p = plan(keys, FitSpec(error=64, write_heavy=True, insert_rate=100_000))
+    assert p.write_mode == "lsm" and p.n_shards == 1 and p.buffer_size == 0
+    assert p.memtable_capacity == 25_000     # rate x 0.25 s, within clamps
+    assert p.level_fanout >= 2
+    report = p.explain()
+    assert "write mode: lsm" in report and "write_heavy=True" in report
+    svc = open_index(keys, FitSpec(error=64, write_heavy=True,
+                                   insert_rate=100_000))
+    assert isinstance(svc, LsmIndexService)
+    assert svc.lookup(np.asarray([keys[7]]))[0] == 7
+
+
+def test_error_one_with_inserts_resolves_to_lsm_by_default():
+    keys = np.arange(512, dtype=np.float64)
+    p = plan(keys, FitSpec(error=1, insert_rate=500))
+    assert p.write_mode == "lsm" and p.buffer_size == 0
+    assert "no Alg. 4 insert buffer" in p.explain()
+    # pinning write_heavy=False keeps the historical loud failure
+    with pytest.raises(ValueError, match="lift write_heavy=False"):
+        plan(keys, FitSpec(error=1, insert_rate=500, write_heavy=False))
+
+
+def test_lsm_plan_validation_and_knob_clash():
+    with pytest.raises(ValueError, match="n_shards"):
+        IndexPlan.from_knobs(error=64, write_mode="lsm", n_shards=2)
+    with pytest.raises(ValueError, match="write_mode"):
+        IndexPlan.from_knobs(error=64, write_mode="btree")
+    p = IndexPlan.from_knobs(error=64, write_mode="lsm")
+    with pytest.raises(TypeError, match="not both"):
+        LsmIndexService(np.arange(8.0), error=8, plan=p)
+    svc = LsmIndexService.from_plan(np.arange(8.0), p)
+    assert svc.plan is p and svc.error == 64
+
+
+# ------------------------------------------------------------------ pipeline
+def test_async_maintenance_cadence_drives_compaction():
+    from repro.serve import AsyncIndexService
+
+    rng = np.random.default_rng(9)
+    svc = LsmIndexService(np.sort(_dup_heavy(rng, 400, 100)), error=16,
+                          assume_sorted=True, memtable_capacity=16,
+                          level_fanout=2)
+    with AsyncIndexService(svc, publish_interval_s=0.01,
+                           flush_threshold=8, prewarm=False) as pipe:
+        for k in _dup_heavy(rng, 200, 100):
+            svc.insert(float(k))
+        deadline = threading.Event()
+        for _ in range(200):              # ~2 s budget for the cadence
+            if svc.metrics().lsm.compactions:
+                break
+            deadline.wait(0.01)
+        m = pipe.metrics()
+    assert m.pipeline is not None
+    assert m.pipeline.compactions >= 1
+    assert svc.metrics().lsm.compactions >= 1

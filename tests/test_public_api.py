@@ -8,7 +8,8 @@ import pytest
 
 LAZY_SETS = {
     "repro.index": ["_ENGINE_NAMES", "_SNAPSHOT_NAMES", "_SHARDED_NAMES",
-                    "_FIT_NAMES", "_PIPELINE_NAMES", "_TELEMETRY_NAMES"],
+                    "_FIT_NAMES", "_LSM_NAMES", "_PIPELINE_NAMES",
+                    "_TELEMETRY_NAMES"],
     "repro.core": ["_JAX_INDEX_NAMES"],
 }
 
@@ -17,6 +18,7 @@ LAZY_HOMES = {  # lazy-set name -> submodule that must define those names
     "_SNAPSHOT_NAMES": "repro.index.snapshot",
     "_SHARDED_NAMES": "repro.index.sharded",
     "_FIT_NAMES": "repro.index.fit",
+    "_LSM_NAMES": "repro.index.lsm",
     "_PIPELINE_NAMES": "repro.index.pipeline",
     "_TELEMETRY_NAMES": "repro.index.telemetry",
     "_JAX_INDEX_NAMES": "repro.core.jax_index",
@@ -87,7 +89,8 @@ def test_query_verbs_on_every_backend_and_serving_layer():
     svc = IndexService(keys, error=8)
     sharded = ri.ShardedIndexService(keys, error=8, n_shards=2,
                                      assume_sorted=True)
-    for layer in (svc, sharded, svc.handle):
+    lsm = ri.LsmIndexService(keys, error=8, assume_sorted=True)
+    for layer in (svc, sharded, lsm, svc.handle):
         missing = [v for v in QUERY_VERBS if not callable(getattr(layer, v,
                                                                   None))]
         assert not missing, f"{type(layer).__name__} lacks verbs {missing}"
