@@ -15,8 +15,9 @@ import argparse
 import platform
 import time
 
-from . import (bench_insert, bench_lookup, bench_lsm, bench_plan, bench_range,
-               bench_rebalance, bench_replan, bench_serving, bench_sharded)
+from . import (bench_device, bench_insert, bench_lookup, bench_lsm,
+               bench_plan, bench_range, bench_rebalance, bench_replan,
+               bench_scalability, bench_serving, bench_sharded)
 from .common import write_json
 
 TINY = {
@@ -59,6 +60,17 @@ TINY = {
                 dict(n=20_000, n_requests=1_200, rate_factors=(0.5, 3.0),
                      max_wait_us_sweep=(100.0, 1000.0), flush_threshold=128,
                      prewarm_flush=256)),
+    # Fig. 11 scalability off the modern served plane (two tiny scales keep
+    # the latency-vs-scale CSV shape without CI-runner minutes)
+    "scalability": (bench_scalability.run,
+                    dict(base=20_000, n_queries=2_000, scales=(1, 2))),
+    # the device-sharded serving plane: subprocess under forced host devices;
+    # asserts the mesh-normalized a2a qps curve is monotone 1->8 devices,
+    # every verb bit-identical to the oracle under both exchanges, and delta
+    # publish < 1/4 of full-republish bytes on a single-dirty-shard stream
+    "device": (bench_device.run,
+               dict(n=50_000, n_queries=16_384, error=128,
+                    device_counts=(1, 2, 4, 8), inserts=32)),
     # the tiered write plane: asserts the LSM service sustains a 4x
     # single-buffer insert flood with read p99 <= 2x its read-only baseline
     # while the single Alg. 4 buffer visibly degrades, and that every verb

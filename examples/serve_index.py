@@ -74,11 +74,21 @@ Everything below the SLO demo is the expert raw-knob path:
   * the sharded service: N key-partitioned writers with per-shard epoch
     streams -- insert into some shards, publish, and watch only the dirty
     shards' epochs advance while the rest keep serving their old snapshot;
-  * optionally the distributed range-partitioned variant (run under 8 fake
-    devices to see the collectives):
+  * optionally the device-sharded serving plane (``repro.index.device``;
+    run under 8 fake devices to see the collectives):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python examples/serve_index.py --distributed
+
+    ``FitSpec(..., device_count=D)`` plans ``backend="device"`` and
+    ``open_index`` builds a ``DeviceShardedService``: one shard per
+    device, replicated boundary router, the two-sided ``search`` run
+    under ``shard_map`` (the plan's cost model picks allgather for small
+    batches, bucketed all_to_all past the modeled crossover --
+    ``explain()`` shows the choice), and publish delta-uploads only the
+    dirty shards' device rows (clean rows keep their buffers).  The
+    seed-era ``core/distributed.py`` entry points are thin wrappers over
+    the same kernels.
 
 Shard-partitioning knobs (`ShardedIndexService`):
   * ``n_shards`` (CLI ``--shards``) -- equal-count contiguous key ranges; the
@@ -372,15 +382,37 @@ def main():
                   f"snapshot starts {s.snapshot_first_key:.0f}, "
                   f"{s.n_keys} keys, epoch {s.epoch}")
 
+    # --- the device-sharded serving plane: shard_map fan-out + delta publish
     if args.distributed:
-        from repro.core.distributed import build_sharded_index, lookup_allgather
         n_dev = len(jax.devices())
+        dev_plan = plan(keys, FitSpec(error=args.error, device_count=n_dev,
+                                      batch_sizes=(args.queries,),
+                                      insert_rate=1000.0))
+        # the exchange strategy is a cost-model choice, audited by explain()
+        print("  " + next(line.strip() for line in
+                          dev_plan.explain().splitlines()
+                          if "device plane" in line))
+        dsvc = open_index(keys, dev_plan)
+        qd = np.asarray(q[: n_dev * 32], np.float64)
+        got = dsvc.lookup(qd)
+        want = np.searchsorted(keys.astype(np.float32), qd.astype(np.float32))
+        assert np.array_equal(got, want)
+        dsvc.insert(float(keys[0]) + 0.5)        # dirties exactly one shard
+        dsvc.publish()
+        dm = dsvc.metrics().device
+        print(f"  device plane: {type(dsvc).__name__} over {dm.n_devices} "
+              f"devices, exchange={dm.exchange}; lookups == oracle; "
+              f"uploaded {dm.bytes_uploaded} B vs "
+              f"{dm.bytes_full_equivalent} B full-equivalent "
+              f"({dm.delta_publishes} delta / {dm.full_publishes} full)")
+        # the seed-era kernels remain as thin wrappers over the same plane
+        from repro.core.distributed import build_sharded_index, lookup_allgather
         mesh = jax.make_mesh((n_dev,), ("data",))
         si = build_sharded_index(keys, args.error, n_dev, mesh, "data")
-        got = np.asarray(lookup_allgather(si, q[: n_dev * 32], mesh, "data"))
-        want = np.searchsorted(keys.astype(np.float32), np.asarray(q[: n_dev * 32]))
-        print(f"  distributed lookup over {n_dev} devices OK "
-              f"({np.mean(got == want)*100:.0f}% exact)")
+        legacy = np.asarray(lookup_allgather(si, q[: n_dev * 32], mesh,
+                                             "data"))
+        print(f"  legacy distributed wrapper over {n_dev} devices OK "
+              f"({np.mean(legacy == want)*100:.0f}% exact)")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,8 @@ FROZEN_CLASSES = frozenset({
     "MetricsSnapshot", "LsmMetrics",
     # LSM tiered write plane: the atomic level manifest and its parts
     "LevelSet", "Run", "MemView",
+    # device serving plane: the device-resident manifest + its metrics node
+    "DeviceShardSet", "DeviceMetrics",
 })
 
 # Builder allowlist: (module path suffix, qualified function name) pairs that
@@ -74,7 +76,8 @@ FROZEN_SETATTR_ALLOW = frozenset({
 # Swap-on-publish handle fields: read paths must bind the current value to a
 # local exactly once ("pin"), then work off the local, or two reads may span
 # a concurrent publish and observe a torn pair of versions.
-PINNED_FIELDS = frozenset({"_shard_set", "_state", "_level_set"})
+PINNED_FIELDS = frozenset({"_shard_set", "_state", "_level_set",
+                           "_device_set"})
 PINNED_SUFFIXES = ("_handle", "_snapshot")
 
 # --------------------------------------------------------------------- RI003
@@ -82,7 +85,7 @@ PINNED_SUFFIXES = ("_handle", "_snapshot")
 # ShardSet; in-place numpy mutation through any of these is a data race.
 FROZEN_ARRAY_FIELDS = frozenset({
     "keys", "start_key", "slope", "base", "seg_end", "payload", "boundaries",
-    "count", "tombstones", "shadow_keys", "shadow_cum",
+    "count", "tombstones", "shadow_keys", "shadow_cum", "offsets",
 })
 # ndarray methods that mutate in place.
 INPLACE_NDARRAY_METHODS = frozenset({
@@ -108,6 +111,7 @@ ACCEL_IMPORT_ROOTS = (
     "repro.kernels", "repro.models",
     "repro.index.engine", "repro.index.snapshot", "repro.index.sharded",
     "repro.index.pipeline", "repro.index.fit", "repro.index.lsm",
+    "repro.index.device",
     "repro.core.jax_index", "repro.core.distributed",
 )
 
@@ -130,15 +134,18 @@ LOCK_ORDER = (
     "Compactor._lock",                   # one merge in flight (outermost:
                                          # the merge section swaps manifests
                                          # via the LSM write lock)
+    "DeviceShardedService._write_lock",  # device publish wraps host publish
     "ShardedIndexService._write_lock",   # writer serialisation
     "LsmIndexService._write_lock",       # LSM writer / manifest swap
     "AsyncIndexService._lock",           # pipeline queue state
     "Memtable._lock",                    # memtable mutate / view build
     "ServingHandle._lock",               # per-shard install swap
     "DispatchEngine._lock",              # lazy tier-engine build
+    "DeviceShardedService._fn_lock",     # lazy collective-kernel build
     "_DeviceEngine._search_lock",        # lazy search-kernel build
     "Monitor._make_lock",                # channel-ring creation
     "JSONLBackend._io_lock",             # telemetry sink flush
+    "DeviceShardedService._counts_lock",  # device verb counters
     "ShardedIndexService._counts_lock",  # verb counters
     "LsmIndexService._counts_lock",      # LSM verb counters (innermost)
 )

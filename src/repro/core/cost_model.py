@@ -238,6 +238,78 @@ def dispatch_thresholds(error: int, n_segments: int,
                                             range_fraction, scan_rows))
 
 
+# ------------------------------------------- device-plane exchange strategies
+def exchange_cost_ns(strategy: str, batch: int, n_devices: int, error: int,
+                     n_segments: int, p: TPUCostParams | None = None,
+                     *, slack: float = 2.0) -> float:
+    """Modeled wall cost of one device-sharded ``search`` collective round.
+
+    Two exchange strategies move a batch of queries across a ``D``-device
+    mesh (``repro.index.device``):
+
+    * ``"allgather"``: one gather of the full batch; every device then
+      answers all ``batch`` queries against its local shard and a ``psum``
+      combines the per-shard ranks.  Cheap to launch, but per-device work
+      is the *whole* batch -- it never shrinks as devices are added.
+    * ``"a2a"``: queries are bucketed to their owning shard (a host-style
+      argsort prelude, ``plan_ns``), exchanged with ``all_to_all``,
+      answered locally, and exchanged back -- three collective hops, but
+      per-device work is only ``slack * batch / D`` queries.
+
+    Per-query search work on a shard is the TPU roofline's window cost over
+    the shard's (smaller) segment slice; the DMA-issue constant stays a
+    fixed per-hop cost rather than a per-query one."""
+    p = p or TPUCostParams()
+    d = max(1, n_devices)
+    s_local = max(1, math.ceil(max(1, n_segments) / d))
+    per_q = latency_ns_tpu(error, s_local, p) - p.dma_setup_ns
+    wire = p.bytes_per_key / p.hbm_gbps
+    if strategy == "allgather":
+        return (p.launch_ns + p.dma_setup_ns + batch * wire + batch * per_q)
+    if strategy == "a2a":
+        routed = slack * batch / d
+        return (p.launch_ns + p.plan_ns
+                + 2 * (p.dma_setup_ns + routed * wire) + routed * per_q)
+    raise ValueError(f"unknown exchange strategy {strategy!r}")
+
+
+def choose_exchange(batch: int, n_devices: int, error: int, n_segments: int,
+                    p: TPUCostParams | None = None,
+                    *, slack: float = 2.0) -> str:
+    """Pick the cheaper exchange strategy for a representative batch size.
+
+    Small batches amortize nothing: the a2a path's bucketing prelude and
+    extra hops dominate, so ``allgather`` wins.  Past the crossover the
+    ``slack/D < 1`` per-device work reduction pays for the hops and ``a2a``
+    wins.  On a single device there is nothing to exchange -- allgather
+    degenerates to a local search and always wins."""
+    if n_devices <= 1:
+        return "allgather"
+    a = exchange_cost_ns("allgather", batch, n_devices, error, n_segments, p,
+                         slack=slack)
+    b = exchange_cost_ns("a2a", batch, n_devices, error, n_segments, p,
+                         slack=slack)
+    return "a2a" if b < a else "allgather"
+
+
+def exchange_crossover_batch(n_devices: int, error: int, n_segments: int,
+                             p: TPUCostParams | None = None,
+                             *, slack: float = 2.0,
+                             max_batch: int = 1 << 22) -> int | None:
+    """Smallest power-of-two batch where ``a2a`` beats ``allgather`` (for
+    ``plan().explain()`` audits), or ``None`` if it never does below
+    ``max_batch``."""
+    if n_devices <= 1:
+        return None
+    b = 1
+    while b <= max_batch:
+        if choose_exchange(b, n_devices, error, n_segments, p,
+                           slack=slack) == "a2a":
+            return b
+        b *= 2
+    return None
+
+
 # ----------------------------------------------- measured-curve re-calibration
 def fit_tier_curves(samples: dict[str, np.ndarray | Sequence],
                     min_samples: int = 8

@@ -1,24 +1,27 @@
-"""Range-partitioned FITing-Tree across a device mesh (DESIGN.md Sec. 5).
+"""Range-partitioned FITing-Tree across a device mesh: compatibility wrapper.
 
-The key space is split into equal-count contiguous shards; each device owns one
-shard's sorted keys plus its own segment table.  A tiny replicated *router* --
-the first key of every shard -- is itself the top level of the paper's
-structure recursed once.  Batched queries are exchanged with collectives inside
-``shard_map``:
+The canonical implementation now lives in ``repro.index.device``: the
+``shard_map`` collective kernels exist once
+(``sharded_lookup_allgather`` / ``sharded_lookup_a2a``, plus the two-sided
+``sharded_search_*`` rank primitives they derive from), and the *served*
+plane -- delta epoch publish, the versioned ``DeviceShardSet`` manifest,
+a2a overflow resolution, telemetry -- is ``DeviceShardedService``.  This
+module keeps the seed-era public surface (``ShardedIndex``,
+``build_sharded_index``, ``lookup_allgather``, ``lookup_a2a``) as thin
+wrappers over those kernels, the same treatment as ``core/jax_index.py``.
 
-  * ``lookup_allgather`` -- every shard sees every query (robust to any skew;
-    costs D*Q query bytes on the interconnect, fine for small Q);
-  * ``lookup_a2a``       -- queries are bucketed by owner shard and exchanged
-    with all_to_all using a slack factor (the production path; overflow beyond
-    slack is answered by a follow-up allgather pass in the caller if needed --
-    returned mask marks dropped queries).
-
-Both return global ranks (-1 if absent).  Tests run under
+Semantics are unchanged for the seed layout (equal-count shards, unique
+keys): global rank of each query, -1 if absent.  ``lookup_a2a`` still
+returns the legacy ``(ranks, ok)`` pair where ``ok=False`` marks queries
+dropped by bucket overflow under skew -- callers re-ask via
+``lookup_allgather``, or use ``DeviceShardedService``, which performs that
+follow-up pass itself.  The psum-based kernels are additionally exact when
+duplicate runs straddle shard cuts (the old ownership-mask implementation
+was not).  Tests run under
 XLA_FLAGS=--xla_force_host_platform_device_count=8 in a subprocess.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -26,11 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import shard_map as _shard_map
+from repro.index.device import sharded_lookup_a2a, sharded_lookup_allgather
 from repro.index.sharded import pack_shard_tables
 from repro.index.table import build_shard_tables
-
-from .jax_index import DeviceIndex, lookup
 
 
 class ShardedIndex(NamedTuple):
@@ -71,106 +72,41 @@ def build_sharded_index(keys: np.ndarray, error: int, n_shards: int,
     return ShardedIndex(error=int(error), **arrays)
 
 
-def _local_index(si: ShardedIndex) -> DeviceIndex:
-    """Inside shard_map every (D, ...) block is (1, ...): squeeze to a local index."""
-    return DeviceIndex(
-        seg_start=si.seg_start[0], slope=si.slope[0], base=si.base[0],
-        seg_end=si.seg_end[0], keys=si.keys[0], error=si.error)
+def _seed_layout(si: ShardedIndex, d: int):
+    """The seed layout's implied row metadata: equal-count shards (every row
+    fully live) and the prefix offsets ``arange(d) * m``."""
+    m = si.keys.shape[1]
+    n_local = jnp.full((d,), m, jnp.int32)
+    offsets = jnp.arange(d, dtype=jnp.int32) * m
+    return n_local, offsets
 
 
 def lookup_allgather(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
                      axis: str = "data") -> jax.Array:
-    """Every shard answers the full query set; one psum combines the answers."""
-    d = mesh.shape[axis]
-    m = si.keys.shape[1]
+    """Every shard answers the full query set; one psum combines the answers.
 
-    @partial(_shard_map, mesh=mesh,
-             in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
-                       P(axis, None), P(), P(axis)),
-             out_specs=P(axis))
-    def impl(seg_start, slope, base, seg_end, keys, boundaries, q_local):
-        me = jax.lax.axis_index(axis)
-        q_all = jax.lax.all_gather(q_local, axis, tiled=True)       # (Q_total,)
-        local = DeviceIndex(seg_start[0], slope[0], base[0], seg_end[0],
-                            keys[0], si.error)
-        lo_b = boundaries[me]
-        hi_b = jnp.where(me == d - 1, jnp.inf, boundaries[jnp.minimum(me + 1, d - 1)])
-        mine = (q_all >= lo_b) & (q_all < hi_b)
-        mine = mine | ((me == 0) & (q_all < boundaries[0]))
-        local_rank = lookup(local, q_all)                           # -1 if absent
-        global_rank = jnp.where(local_rank >= 0, local_rank + me * m, -1)
-        contrib = jnp.where(mine, global_rank, 0)
-        owned = jnp.where(mine, 1, 0)
-        total = jax.lax.psum(contrib, axis)
-        owners = jax.lax.psum(owned, axis)
-        result = jnp.where(owners > 0, total, -1)
-        # slice this device's chunk back out
-        q_per = q_local.shape[0]
-        return jax.lax.dynamic_slice_in_dim(result, me * q_per, q_per)
-
-    return impl(si.seg_start, si.slope, si.base, si.seg_end, si.keys,
-                si.boundaries, queries)
+    Deprecated entry point: delegates to
+    :func:`repro.index.device.sharded_lookup_allgather` (use
+    ``DeviceShardedService`` for the served plane)."""
+    n_local, _ = _seed_layout(si, mesh.shape[axis])
+    return sharded_lookup_allgather(
+        si.seg_start, si.slope, si.base, si.seg_end, si.keys, n_local,
+        queries, mesh=mesh, axis=axis, error=si.error)
 
 
 def lookup_a2a(si: ShardedIndex, queries: jax.Array, mesh: Mesh,
                axis: str = "data", slack: float = 2.0
                ) -> tuple[jax.Array, jax.Array]:
-    """Bucketed all_to_all exchange (production path).
+    """Bucketed all_to_all exchange; returns the legacy ``(ranks, ok)`` pair.
 
-    Each device buckets its local queries by owner shard into D buckets of
-    capacity ceil(Q/D * slack) (padded with +inf sentinels), exchanges buckets
-    with all_to_all, answers the queries it owns, and reverses the exchange.
-    Returns (ranks, ok) where ok=False marks queries dropped by bucket
-    overflow (caller may re-ask via lookup_allgather).
-    """
-    d = mesh.shape[axis]
-    m = si.keys.shape[1]
-    q_per = queries.shape[0] // d
-    cap = int(np.ceil(q_per / d * slack))
-
-    @partial(_shard_map, mesh=mesh,
-             in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None),
-                       P(axis, None), P(), P(axis)),
-             out_specs=(P(axis), P(axis)))
-    def impl(seg_start, slope, base, seg_end, keys, boundaries, q_local):
-        me = jax.lax.axis_index(axis)
-        local = DeviceIndex(seg_start[0], slope[0], base[0], seg_end[0],
-                            keys[0], si.error)
-        owner = jnp.clip(jnp.searchsorted(boundaries, q_local, side="right") - 1,
-                         0, d - 1)                                   # (q,)
-        # slot each query into its bucket (capacity cap) via a stable sort
-        order = jnp.argsort(owner, stable=True)
-        sorted_owner = owner[order]
-        rank_in_bkt = jnp.arange(q_local.shape[0]) - jnp.searchsorted(
-            sorted_owner, sorted_owner, side="left")
-        ok_sorted = rank_in_bkt < cap
-        buckets = jnp.full((d, cap), jnp.inf, q_local.dtype)
-        src_pos = jnp.full((d, cap), -1, jnp.int32)
-        slot = jnp.clip(rank_in_bkt, 0, cap - 1)
-        buckets = buckets.at[sorted_owner, slot].set(
-            jnp.where(ok_sorted, q_local[order], jnp.inf))
-        src_pos = src_pos.at[sorted_owner, slot].set(
-            jnp.where(ok_sorted, order.astype(jnp.int32), -1))
-        # exchange: after a2a, row j of `incoming` is what device j sent to me
-        incoming = jax.lax.all_to_all(buckets, axis, split_axis=0,
-                                      concat_axis=0, tiled=True)     # (d, cap)
-        flat = incoming.reshape(-1)
-        ans = lookup(local, flat)
-        ans = jnp.where(jnp.isinf(flat), -1, ans)
-        ans = jnp.where(ans >= 0, ans + me * m, -1).reshape(d, cap)
-        # reverse exchange
-        back = jax.lax.all_to_all(ans, axis, split_axis=0,
-                                  concat_axis=0, tiled=True).reshape(d, cap)
-        result = jnp.full(q_local.shape, -1, jnp.int32)
-        okq = jnp.zeros(q_local.shape, bool)
-        # scatter answers back to original slots
-        flat_src = src_pos.reshape(-1)
-        flat_back = back.reshape(-1)
-        good = flat_src >= 0
-        result = result.at[jnp.clip(flat_src, 0, None)].max(
-            jnp.where(good, flat_back, -1))
-        okq = okq.at[jnp.clip(flat_src, 0, None)].max(good)
-        return result, okq
-
-    return impl(si.seg_start, si.slope, si.base, si.seg_end, si.keys,
-                si.boundaries, queries)
+    Deprecated entry point: delegates to
+    :func:`repro.index.device.sharded_lookup_a2a`.  ``ok=False`` marks
+    queries dropped by bucket overflow under skew beyond ``slack`` -- the
+    caller may re-ask those via :func:`lookup_allgather`;
+    ``DeviceShardedService`` performs that follow-up pass itself, so the
+    mask never reaches *its* callers."""
+    n_local, offsets = _seed_layout(si, mesh.shape[axis])
+    return sharded_lookup_a2a(
+        si.seg_start, si.slope, si.base, si.seg_end, si.keys, n_local,
+        offsets, si.boundaries, queries, mesh=mesh, axis=axis,
+        error=si.error, slack=slack)

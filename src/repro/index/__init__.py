@@ -27,6 +27,11 @@ Module map (see ROADMAP.md):
                  ``Memtable`` -> immutable learned runs -> background
                  ``Compactor``), one atomic versioned ``LevelSet`` manifest,
                  and the multi-level leftmost-rank fan-in for every verb
+  device.py   -- ``DeviceShardedService``: the device-sharded serving plane
+                 (replicated boundary router, ``shard_map`` collective
+                 search under allgather / bucketed all_to_all exchange, and
+                 delta epoch publish re-shipping only dirty shards' rows
+                 via the versioned ``DeviceShardSet`` manifest)
   fit.py      -- ``FitSpec`` -> ``plan()`` -> ``IndexPlan`` -> ``open_index``:
                  the Sec. 6 cost model resolving SLOs into every knob above
   pipeline.py -- ``AsyncIndexService``/``open_pipeline``: the coalescing
@@ -61,20 +66,23 @@ _FIT_NAMES = {"FitSpec", "IndexPlan", "InfeasibleSpecError", "PlanCandidate",
               "open_index", "plan"}
 _LSM_NAMES = {"Compactor", "LevelSet", "LsmIndexService", "MemView",
               "Memtable", "MemtableFullError", "Run"}
+_DEVICE_NAMES = {"DeviceShardSet", "DeviceShardedService",
+                 "sharded_lookup_a2a", "sharded_lookup_allgather",
+                 "sharded_search_a2a", "sharded_search_allgather"}
 _PIPELINE_NAMES = {"AsyncIndexService", "PipelineClosed",
                    "PipelineOverloaded", "open_pipeline"}
-_TELEMETRY_NAMES = {"JSONLBackend", "LsmMetrics", "MemoryBackend",
-                    "MetricsSnapshot", "Monitor", "PipelineMetrics",
-                    "Replanner", "ServiceMetrics", "ShardMetrics",
-                    "TierMetrics", "tier_metrics"}
+_TELEMETRY_NAMES = {"DeviceMetrics", "JSONLBackend", "LsmMetrics",
+                    "MemoryBackend", "MetricsSnapshot", "Monitor",
+                    "PipelineMetrics", "Replanner", "ServiceMetrics",
+                    "ShardMetrics", "TierMetrics", "tier_metrics"}
 
 __all__ = [
     "PointResult", "QueryVerbs", "RangeResult", "SegmentTable",
     "build_shard_tables", "numpy_lookup", "numpy_search", "route_keys",
     "shard_boundaries", "shard_cut_indices", "shard_partition",
     *sorted(_ENGINE_NAMES), *sorted(_SNAPSHOT_NAMES), *sorted(_SHARDED_NAMES),
-    *sorted(_FIT_NAMES), *sorted(_LSM_NAMES), *sorted(_PIPELINE_NAMES),
-    *sorted(_TELEMETRY_NAMES),
+    *sorted(_FIT_NAMES), *sorted(_LSM_NAMES), *sorted(_DEVICE_NAMES),
+    *sorted(_PIPELINE_NAMES), *sorted(_TELEMETRY_NAMES),
 ]
 
 
@@ -94,6 +102,9 @@ def __getattr__(name):
     if name in _LSM_NAMES:
         from . import lsm
         return getattr(lsm, name)
+    if name in _DEVICE_NAMES:
+        from . import device
+        return getattr(device, name)
     if name in _PIPELINE_NAMES:
         from . import pipeline
         return getattr(pipeline, name)

@@ -43,10 +43,11 @@ import math
 
 import numpy as np
 
-from repro.core.cost_model import (CostParams, TPUCostParams,
+from repro.core.cost_model import (CostParams, TPUCostParams, choose_exchange,
                                    choose_error_for_latency,
                                    choose_error_for_space,
-                                   dispatch_thresholds, latency_ns,
+                                   dispatch_thresholds,
+                                   exchange_crossover_batch, latency_ns,
                                    latency_ns_tpu, learn_segments_fn,
                                    range_latency_ns, range_latency_ns_tpu,
                                    scan_ns_per_row_tpu, size_bytes)
@@ -125,6 +126,12 @@ class FitSpec:
       computed (and the spec shipped in a config file) before the full key
       set exists; ``plan(None, spec)`` uses it.  ``n_keys_hint`` scales the
       sample back up to the production key count for the shard heuristic.
+    * ``device_count`` -- serve from a device mesh: the plan pins one shard
+      per device (``backend="device"``, :class:`repro.index.device.
+      DeviceShardedService`) and scores the collective exchange strategy
+      (allgather vs bucketed all_to_all) via the cost model on the expected
+      batch sizes.  Incompatible with ``write_heavy=True`` (the LSM plane
+      is host-resident).
 
     ``hardware`` selects the latency model: ``"cpu"`` is the paper's Eq. 1
     cache-miss model (:class:`CostParams`), ``"tpu"`` the roofline DMA model
@@ -145,6 +152,7 @@ class FitSpec:
     range_scan_rows: int = 256
     key_sample: tuple[float, ...] | None = None
     n_keys_hint: int | None = None
+    device_count: int | None = None
     # hardware profile
     hardware: str = "cpu"
     cpu_params: CostParams = CostParams()
@@ -194,6 +202,16 @@ class FitSpec:
             raise ValueError(f"range_scan_rows must be >= 1, got "
                              f"{self.range_scan_rows!r} (expected rows per "
                              "range scan)")
+        if self.device_count is not None and self.device_count < 1:
+            raise ValueError(f"device_count must be >= 1, got "
+                             f"{self.device_count!r} (the number of devices "
+                             "the plan fans the shard layout over)")
+        if self.device_count is not None and self.write_heavy:
+            raise ValueError(
+                "device_count is incompatible with write_heavy=True: the LSM "
+                "tiered write plane is host-resident, while a device plan "
+                "serves from device-installed snapshots; drop one of the two "
+                "hints")
         if self.key_sample is not None and len(self.key_sample) == 0:
             raise ValueError("key_sample must be non-empty when given (pass "
                              "None to require keys at plan time)")
@@ -306,6 +324,14 @@ class IndexPlan:
     flush_threshold: int | None = None
     max_wait_us: float | None = None
     queue_depth: int | None = None
+    # device plane (repro.index.device.DeviceShardedService): serve from a
+    # device-resident packed shard layout, one shard per device.  exchange
+    # names the shard_map collective strategy for the search fan-out:
+    # "allgather" (every device scores the full batch, psum-reduced),
+    # "a2a" (owner-routed bucketed all_to_all with slack capacity), or
+    # "auto" (per-call cost-model choice on the batch size).
+    device_count: int | None = None
+    exchange: str | None = None
     # provenance / audit trail
     objective: str = "raw"           # latency | space | error | raw
     budget: float | None = None
@@ -342,6 +368,16 @@ class IndexPlan:
             raise ValueError("an lsm-mode plan is single-service (the level "
                              "structure absorbs write traffic instead of "
                              f"shard fan-out); got n_shards={self.n_shards}")
+        if self.device_count is not None and self.device_count < 1:
+            raise ValueError(f"device_count must be >= 1, got "
+                             f"{self.device_count}")
+        if self.exchange is not None \
+                and self.exchange not in ("allgather", "a2a", "auto"):
+            raise ValueError(f"exchange must be 'allgather', 'a2a' or 'auto'"
+                             f" (or None), got {self.exchange!r}")
+        if self.device_count is not None and self.write_mode == "lsm":
+            raise ValueError("a device plan cannot use the lsm write mode: "
+                             "the tiered write plane is host-resident")
         if self.flush_threshold is not None and self.flush_threshold < 1:
             raise ValueError(f"flush_threshold must be >= 1, got "
                              f"{self.flush_threshold}")
@@ -432,6 +468,25 @@ class IndexPlan:
                 f"  dispatch tiers (cost-model crossings): host <= "
                 f"{self.small_max} < device-bisect < {self.large_min} <= "
                 f"pallas")
+        if self.device_count is not None:
+            line = (f"  device plane: {self.device_count} device(s), one "
+                    f"shard each; exchange={self.exchange}")
+            if self.exchange in ("allgather", "a2a") \
+                    and self.device_count > 1:
+                seg = next((c.n_segments for c in self.candidates
+                            if c.chosen), None)
+                if seg is None:  # raw plan: rough worst-case segmentation
+                    seg = max(1, math.ceil(max(1, self.n_keys)
+                                           / (2 * self.error)))
+                per_dev = max(1, math.ceil(seg / self.device_count))
+                tpu = (self.spec.tpu_params if self.spec is not None
+                       else TPUCostParams())
+                cross = exchange_crossover_batch(
+                    self.device_count, self.error, per_dev, tpu)
+                line += (" (a2a never wins under the model)" if cross is None
+                         else f" (modeled a2a crossover ~{cross} "
+                              f"queries/batch)")
+            lines.append(line)
         if self.flush_threshold is not None:
             lines.append(
                 f"  async pipeline: coalesce {self.flush_threshold} queued "
@@ -692,6 +747,31 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
     # traffic the shard heuristic would otherwise fan out over epochs
     n_shards = 1 if write_mode == "lsm" else _plan_shards(spec, arr.shape[0])
     backend = _plan_backend(spec, small_max, large_min)
+    device_count = None
+    exchange = None
+    if spec.device_count is not None:
+        if write_mode == "lsm":
+            raise ValueError(
+                "the spec resolved to the lsm write mode (insert_rate="
+                f"{spec.insert_rate:g}/s with no Alg. 4 buffer at error="
+                f"{chosen}) but also asks for device_count="
+                f"{spec.device_count}; the tiered write plane is "
+                "host-resident -- relax the budget so a buffered error is "
+                "chosen, or drop one of the two hints")
+        # one shard per device, still capped by the duplicate-safe cut
+        # requirement (each device needs at least one distinct key run)
+        total = max(arr.shape[0], spec.n_keys_hint or 0)
+        distinct = max(1, int(total * (1.0 - spec.duplicate_density)))
+        device_count = min(int(spec.device_count), distinct)
+        n_shards = device_count
+        backend = "device"
+        # score the collective exchange at the largest expected batch (the
+        # a2a crossover favors big batches: routed work is ~slack*Q/D per
+        # device vs the full Q under allgather)
+        rep_batch = max(spec.batch_sizes) if spec.batch_sizes else 4096
+        exchange = choose_exchange(rep_batch, device_count,
+                                   max(1, chosen - buffer_size), n_segments,
+                                   spec.tpu_params)
     # auto-publish roughly once per second of expected write traffic, kept
     # inside sane bounds; read-only workloads publish manually (the lsm
     # cadence drives spill/compaction maintenance through the same knob)
@@ -719,6 +799,7 @@ def plan(keys, spec: FitSpec, *, assume_sorted: bool = False) -> IndexPlan:
                      level_fanout=level_fanout,
                      flush_threshold=flush_threshold,
                      max_wait_us=max_wait_us, queue_depth=queue_depth,
+                     device_count=device_count, exchange=exchange,
                      objective=spec.objective,
                      budget=budget, hardware=spec.hardware,
                      n_keys=int(arr.shape[0]), candidates=candidates,
@@ -729,10 +810,11 @@ def open_index(keys, spec_or_plan: "FitSpec | IndexPlan", *,
                payload: np.ndarray | None = None, **service_kwargs):
     """The single SLO-driven entry point: plan (if needed) and build.
 
-    Returns an ``LsmIndexService`` for a ``write_mode="lsm"`` plan, an
-    ``IndexService`` for a one-shard plan, else a ``ShardedIndexService`` --
-    all ready for the full insert -> publish -> lookup cycle with no raw
-    knob supplied by the caller.  Extra
+    Returns a ``DeviceShardedService`` for a ``backend="device"`` plan, an
+    ``LsmIndexService`` for a ``write_mode="lsm"`` plan, an ``IndexService``
+    for a one-shard plan, else a ``ShardedIndexService`` -- all ready for
+    the full insert -> publish -> lookup cycle with no raw knob supplied by
+    the caller.  Extra
     ``service_kwargs`` (e.g. ``skew_threshold``, ``auto_rebalance``,
     ``mode``) pass through to the service constructor.
     """
@@ -755,6 +837,10 @@ def open_index(keys, spec_or_plan: "FitSpec | IndexPlan", *,
         raise TypeError(f"open_index needs a FitSpec or IndexPlan, got "
                         f"{type(spec_or_plan).__name__}")
     # lazy: the services import this module for their plan= constructors
+    if resolved.backend == "device":
+        from .device import DeviceShardedService
+        return DeviceShardedService.from_plan(keys, resolved, payload=payload,
+                                              **service_kwargs)
     if resolved.write_mode == "lsm":
         from .lsm import LsmIndexService
         return LsmIndexService.from_plan(keys, resolved, payload=payload,

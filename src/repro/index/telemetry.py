@@ -82,6 +82,12 @@ CH_SPILL = "lsm.spill"              # (spilled_keys, wall_ns)
 CH_COMPACT = "lsm.compaction"       # (runs_merged, merged_keys, wall_ns)
 CH_READ_AMP = "lsm.read_amp"        # (fan_in_sources,) sampled per verb
 CH_RUN_COUNT = "lsm.runs"           # (n_runs,) after each manifest swap
+CH_DEVICE_PUBLISH = "device.publish"  # (dirty_shards, bytes, wall_ns, full)
+CH_DEVICE_COLLECTIVE = "device.collective"  # (strategy, batch, wall_ns)
+CH_DEVICE_OVERFLOW = "device.overflow"  # (overflow_queries,) a2a slack misses
+
+# device.collective strategy codes
+XCHG_ALLGATHER, XCHG_A2A = 0, 1
 
 # pipeline.flush cause codes
 FLUSH_THRESHOLD, FLUSH_DEADLINE, FLUSH_DRAIN, FLUSH_INLINE = 0, 1, 2, 3
@@ -380,6 +386,35 @@ class LsmMetrics:
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceMetrics:
+    """The device-sharded serving plane's node in the metrics tree
+    (``device.*`` channels + the current ``DeviceShardSet`` shape).
+
+    ``per_device_bytes`` is the resident packed-table footprint per device
+    row (sharded arrays only; the replicated router is counted once in
+    ``replicated_bytes``).  ``delta_fraction`` is the byte ratio actually
+    uploaded vs the full-republish equivalent over the service lifetime --
+    the headline number the delta-publish path exists to shrink."""
+    device_set_version: int
+    n_devices: int
+    exchange: str
+    s_cap: int
+    m_cap: int
+    per_device_bytes: tuple[int, ...]
+    replicated_bytes: int
+    publishes: int
+    delta_publishes: int
+    full_publishes: int
+    bytes_uploaded: int
+    bytes_full_equivalent: int
+    delta_fraction: float
+    allgather_calls: int
+    a2a_calls: int
+    a2a_overflow_queries: int
+    collective_wall_ns: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ServiceMetrics:
     """The one typed, versioned observability snapshot (``MetricsSnapshot``).
 
@@ -403,6 +438,7 @@ class ServiceMetrics:
     tiers: tuple[TierMetrics, ...] = ()
     pipeline: PipelineMetrics | None = None
     lsm: LsmMetrics | None = None
+    device: DeviceMetrics | None = None
     schema_version: int = METRICS_SCHEMA_VERSION
 
     def to_json(self) -> str:
@@ -426,6 +462,10 @@ class ServiceMetrics:
             lsm["run_counts"] = tuple(lsm.get("run_counts", ()))
             lsm["run_keys"] = tuple(lsm.get("run_keys", ()))
             d["lsm"] = LsmMetrics(**lsm)
+        if d.get("device") is not None:
+            dev = dict(d["device"])
+            dev["per_device_bytes"] = tuple(dev.get("per_device_bytes", ()))
+            d["device"] = DeviceMetrics(**dev)
         return cls(**d)
 
 

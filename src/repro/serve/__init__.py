@@ -3,17 +3,19 @@
 The SLO-driven construction path (``FitSpec`` -> ``open_index``) and the
 typed query plane's result types (``PointResult``/``RangeResult``) are
 re-exported from ``repro.index`` so serving code has one import."""
+from repro.index.device import DeviceShardedService, DeviceShardSet
 from repro.index.fit import FitSpec, IndexPlan, open_index
 from repro.index.pipeline import (AsyncIndexService, PipelineClosed,
                                   PipelineOverloaded, open_pipeline)
 from repro.index.query import PointResult, RangeResult
 from repro.index.sharded import ShardedIndexService, ShardSet, ShardStats
-from repro.index.telemetry import (MetricsSnapshot, Monitor, Replanner,
-                                   ServiceMetrics)
+from repro.index.telemetry import (DeviceMetrics, MetricsSnapshot, Monitor,
+                                   Replanner, ServiceMetrics)
 
 from .index_service import IndexService
 
-__all__ = ["AsyncIndexService", "FitSpec", "IndexPlan", "IndexService",
+__all__ = ["AsyncIndexService", "DeviceMetrics", "DeviceShardSet",
+           "DeviceShardedService", "FitSpec", "IndexPlan", "IndexService",
            "MetricsSnapshot", "Monitor", "PipelineClosed",
            "PipelineOverloaded", "PointResult", "RangeResult", "Replanner",
            "ServiceMetrics", "ShardSet", "ShardedIndexService", "ShardStats",

@@ -1,0 +1,185 @@
+"""Executed in a subprocess by test_device.py with 8 forced host devices.
+
+Covers the ISSUE-10 device-plane contracts end to end:
+  * all five query verbs vs the numpy searchsorted oracle, on
+    duplicate-heavy keys whose equal runs straddle device cuts, under BOTH
+    exchange strategies (allgather and bucketed all_to_all);
+  * the a2a slack-overflow contract: a skew-adversarial stream (every query
+    owned by one shard, slack=1) is still answered exactly -- the service
+    resolves the overflow internally and only the telemetry sees it;
+  * delta publish: a single-dirty-shard publish re-ships exactly one row,
+    the clean shards' device buffers keep their identity
+    (unsafe_buffer_pointer), and the uploaded bytes are < 1/4 of a full
+    republish;
+  * a concurrent publisher/reader race: no torn DeviceShardSet (the
+    sanitizer's pin tracker is live via REPRO_SANITIZE=1, and every read
+    stays bit-identical to one of the published epochs).
+"""
+import os
+import threading
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("REPRO_SANITIZE", "1")
+
+import jax
+import numpy as np
+
+from repro.index.device import DeviceShardedService
+
+assert jax.device_count() == 8
+
+rng = np.random.default_rng(7)
+# duplicate-heavy: ~300 distinct values over 20k keys => long equal runs
+# that straddle the equal-count device cuts
+keys = np.sort(rng.choice(rng.integers(0, 1 << 20, 300), 20_000))
+keys = keys.astype(np.float64)
+k32 = keys.astype(np.float32)
+queries = np.concatenate([keys[::11],
+                          rng.integers(0, 1 << 20, 500).astype(np.float64)])
+q32 = queries.astype(np.float32)
+
+
+def oracle_side(q, side):
+    return np.searchsorted(k32, q.astype(np.float32), side)
+
+
+for xchg in ("allgather", "a2a"):
+    svc = DeviceShardedService(keys, error=64, device_count=8,
+                               buffer_size=16, exchange=xchg,
+                               assume_sorted=True)
+    left, right = oracle_side(queries, "left"), oracle_side(queries, "right")
+    for side, exp in (("left", left), ("right", right)):
+        np.testing.assert_array_equal(svc.search(queries, side=side), exp,
+                                      err_msg=f"{xchg}/search/{side}")
+    np.testing.assert_array_equal(svc.lookup(queries),
+                                  np.where(right > left, left, -1),
+                                  err_msg=f"{xchg}/lookup")
+    pt = svc.point(queries)
+    np.testing.assert_array_equal(pt.rank, np.where(right > left, left, -1))
+    np.testing.assert_array_equal(pt.found, right > left)
+    pred = svc.predecessor(queries)
+    np.testing.assert_array_equal(pred.rank,
+                                  np.where(right - 1 >= 0, right - 1, -1))
+    succ = svc.successor(queries)
+    np.testing.assert_array_equal(succ.rank,
+                                  np.where(left < keys.size, left, -1))
+    lo_q, hi_q = queries - 5.0, queries + 5.0
+    np.testing.assert_array_equal(
+        svc.count(lo_q, hi_q),
+        np.maximum(oracle_side(hi_q, "right") - oracle_side(lo_q, "left"), 0))
+    rr = svc.range(float(keys[100]), float(keys[15_000]))
+    lo_r = int(oracle_side(keys[100:101], "left")[0])
+    hi_r = int(oracle_side(keys[15_000:15_001], "right")[0])
+    assert (rr.lo_rank, rr.hi_rank) == (lo_r, hi_r), xchg
+    np.testing.assert_array_equal(rr.keys, keys[lo_r:hi_r])
+    print(f"{xchg}: five verbs bit-identical to the oracle")
+
+# ---- a2a skew-adversarial regression: every query owned by shard 0, no
+# slack headroom; answers must STILL be exact (follow-up allgather pass),
+# with the overflow visible only in telemetry
+svc = DeviceShardedService(keys, error=64, device_count=8, exchange="a2a",
+                           slack=1.0, assume_sorted=True)
+skew = np.full(512, float(keys[0]))
+np.testing.assert_array_equal(svc.search(skew, side="left"),
+                              oracle_side(skew, "left"))
+np.testing.assert_array_equal(svc.lookup(skew),
+                              np.where(oracle_side(skew, "right")
+                                       > oracle_side(skew, "left"),
+                                       oracle_side(skew, "left"), -1))
+dm = svc.metrics().device
+assert dm.a2a_overflow_queries > 0, "skewed stream must overflow slack=1"
+print(f"a2a skew-adversarial OK ({dm.a2a_overflow_queries} overflow "
+      "queries resolved internally)")
+
+# ---- delta publish: one dirty shard => one re-shipped row, clean rows
+# keep buffer identity, uploaded bytes < 1/4 of a full republish
+svc = DeviceShardedService(keys, error=64, device_count=8, buffer_size=16,
+                           assume_sorted=True)
+ds0 = svc.device_set
+ptr0 = {name: [s.data.unsafe_buffer_pointer()
+               for s in getattr(ds0, name).addressable_shards]
+        for name in ("d_seg_start", "d_slope", "d_base", "d_seg_end",
+                     "d_keys", "d_n_local")}
+target = float(keys[0]) + 0.25           # routes to shard 0
+dirty = svc.shard_of(target)
+svc.insert(target)
+m_before = svc.metrics().device
+svc.publish()
+ds1 = svc.device_set
+assert ds1.version == ds0.version + 1
+assert ds1.s_cap == ds0.s_cap and ds1.m_cap == ds0.m_cap, \
+    "single insert must stay inside the padded capacities (delta-eligible)"
+for name, before in ptr0.items():
+    after = [s.data.unsafe_buffer_pointer()
+             for s in getattr(ds1, name).addressable_shards]
+    same = [i for i in range(8) if after[i] == before[i]]
+    assert len(same) == 7 and dirty not in same, \
+        f"{name}: clean rows must keep buffer identity, dirty row must not"
+m_after = svc.metrics().device
+assert m_after.delta_publishes == m_before.delta_publishes + 1
+delta_bytes = m_after.bytes_uploaded - m_before.bytes_uploaded
+full_bytes = (m_after.bytes_full_equivalent
+              - m_before.bytes_full_equivalent)
+assert delta_bytes * 4 < full_bytes, (delta_bytes, full_bytes)
+# and the published insert is served
+exp = np.searchsorted(np.sort(np.append(k32, np.float32(target))),
+                      np.float32(target), "left")
+assert int(svc.search(np.asarray([target]))[0]) == int(exp)
+print(f"delta publish OK ({delta_bytes} B vs {full_bytes} B full, "
+      f"ratio {delta_bytes / full_bytes:.3f})")
+
+# ---- concurrent publish/reader race: readers pin one manifest per verb;
+# every answer must be consistent with SOME published key set (before or
+# after any in-flight publish), never a torn mix.  The pin tracker
+# (REPRO_SANITIZE=1) independently asserts single-manifest reads.
+svc = DeviceShardedService(keys, error=64, device_count=8, buffer_size=16,
+                           exchange="allgather", assume_sorted=True)
+probe = np.asarray([float(keys[0]), float(keys[-1]) + 10.0])
+stop = threading.Event()
+errors: list[BaseException] = []
+inserted = []
+
+
+def writer():
+    try:
+        base = float(keys[-1])
+        for i in range(1, 41):
+            svc.insert(base + i)           # always the last shard
+            inserted.append(base + i)
+            svc.publish()
+    except BaseException as exc:  # noqa: BLE001 - surfaced by the assert
+        errors.append(exc)
+    finally:
+        stop.set()
+
+
+def reader():
+    try:
+        while not stop.is_set():
+            r = svc.point(probe)
+            # probe[0] is the global minimum: rank 0 in every epoch
+            assert int(r.rank[0]) == 0 and bool(r.found[0])
+            # probe[1] is greater than every key in every epoch: absent,
+            # and its insertion rank equals that epoch's total key count
+            n = int(svc.search(probe[1:])[0])
+            assert not bool(r.found[1])
+            assert keys.size <= n <= keys.size + 40
+    except BaseException as exc:  # noqa: BLE001
+        errors.append(exc)
+
+
+threads = [threading.Thread(target=writer)] + \
+    [threading.Thread(target=reader) for _ in range(2)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join(timeout=300)
+assert not errors, errors
+final = np.sort(np.concatenate([keys, inserted]))
+np.testing.assert_array_equal(
+    svc.search(final[:: 97]),
+    np.searchsorted(final.astype(np.float32),
+                    final[:: 97].astype(np.float32), "left"))
+print(f"concurrent publish/reader race OK "
+      f"({svc.metrics().device.publishes} publishes)")
+print("ALL_OK")

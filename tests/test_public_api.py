@@ -8,8 +8,8 @@ import pytest
 
 LAZY_SETS = {
     "repro.index": ["_ENGINE_NAMES", "_SNAPSHOT_NAMES", "_SHARDED_NAMES",
-                    "_FIT_NAMES", "_LSM_NAMES", "_PIPELINE_NAMES",
-                    "_TELEMETRY_NAMES"],
+                    "_FIT_NAMES", "_LSM_NAMES", "_DEVICE_NAMES",
+                    "_PIPELINE_NAMES", "_TELEMETRY_NAMES"],
     "repro.core": ["_JAX_INDEX_NAMES"],
 }
 
@@ -19,6 +19,7 @@ LAZY_HOMES = {  # lazy-set name -> submodule that must define those names
     "_SHARDED_NAMES": "repro.index.sharded",
     "_FIT_NAMES": "repro.index.fit",
     "_LSM_NAMES": "repro.index.lsm",
+    "_DEVICE_NAMES": "repro.index.device",
     "_PIPELINE_NAMES": "repro.index.pipeline",
     "_TELEMETRY_NAMES": "repro.index.telemetry",
     "_JAX_INDEX_NAMES": "repro.core.jax_index",
@@ -90,7 +91,9 @@ def test_query_verbs_on_every_backend_and_serving_layer():
     sharded = ri.ShardedIndexService(keys, error=8, n_shards=2,
                                      assume_sorted=True)
     lsm = ri.LsmIndexService(keys, error=8, assume_sorted=True)
-    for layer in (svc, sharded, lsm, svc.handle):
+    device = ri.DeviceShardedService(keys, error=8, device_count=1,
+                                     assume_sorted=True)
+    for layer in (svc, sharded, lsm, device, svc.handle):
         missing = [v for v in QUERY_VERBS if not callable(getattr(layer, v,
                                                                   None))]
         assert not missing, f"{type(layer).__name__} lacks verbs {missing}"
@@ -108,13 +111,16 @@ def test_metrics_surface_on_every_serving_layer():
     svc = IndexService(keys, error=8, monitor=Monitor())
     sharded = ri.ShardedIndexService(keys, error=8, n_shards=2,
                                      assume_sorted=True)
-    for layer in (svc, sharded):
+    device = ri.DeviceShardedService(keys, error=8, device_count=1,
+                                     assume_sorted=True)
+    for layer in (svc, sharded, device):
         m = layer.metrics()
         assert isinstance(m, ri.ServiceMetrics)
         assert m.schema_version == 1
         assert m.plan_revision == layer.plan.revision == 0
         assert len(m.shards) == m.n_shards
         assert ri.ServiceMetrics.from_json(m.to_json()) == m
+    assert isinstance(device.metrics().device, ri.DeviceMetrics)
     with pytest.warns(DeprecationWarning):
         sharded.service_stats()
     with pytest.warns(DeprecationWarning):
